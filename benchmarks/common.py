@@ -1,0 +1,22 @@
+"""Timing helpers for the benchmark harness (CPU wall clock)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
+    """Median wall time of fn(*args) with block_until_ready, in seconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out

@@ -1,0 +1,213 @@
+"""Scan-aware analytic cost model over jaxprs (roofline source of truth).
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically — a scanned 8-layer stack reports 1/8 of the unrolled FLOPs),
+which would gut any roofline built on scanned-layer models.  This walker
+computes FLOPs / HBM bytes / collective bytes directly from the jaxpr:
+
+  * ``scan`` bodies are multiplied by their trip count (exact),
+  * ``remat``/``pjit``/custom-AD calls are recursed into (so the backward
+    pass's recompute shows up, giving a meaningful MODEL_FLOPS/HLO_FLOPs
+    utilization ratio),
+  * ``shard_map`` bodies use per-shard shapes and are multiplied by the
+    mesh size (the body runs on every device), keeping units consistent
+    with the global-tensor accounting outside,
+  * explicit collectives (psum / all_gather / psum_scatter / all_to_all /
+    ppermute) are tallied in bytes per mesh axis with ring-model factors
+    (all-reduce = 2x payload, others = 1x).
+
+Per-device numbers are totals / mesh size — i.e. assuming every op
+parallelizes across its sharded dims; replicated compute (tiny: routers,
+norms) is therefore slightly undercounted, noted in EXPERIMENTS.md.
+
+GSPMD-inserted movement (resharding all-gathers for tensor-parallel
+matmuls) does not exist at jaxpr level; ``roofline.py`` adds the standard
+analytic Megatron-TP term for it and the dry-run's compiled-HLO collective
+census serves as existence evidence.
+
+Byte accounting is the classic roofline in+out traffic per primitive —
+an upper bound that ignores XLA fusion; used consistently across cells so
+relative comparisons hold.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import reduce
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax import core
+
+# Primitives that do ~1 flop per output element.
+_ELEMENTWISE_FLOPS = {
+    "add", "sub", "mul", "div", "max", "min", "neg", "abs", "floor", "ceil",
+    "exp", "log", "tanh", "logistic", "rsqrt", "sqrt", "pow", "integer_pow",
+    "erf", "sin", "cos", "select_n", "clamp", "and", "or", "xor", "not",
+    "shift_left", "shift_right_logical", "rem", "sign", "round", "nextafter",
+    "atan2", "expm1", "log1p", "cbrt", "square",
+}
+_REDUCE_FLOPS = {
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+    "reduce_or", "argmax", "argmin", "cumsum", "cumprod", "cummax", "cummin",
+    "logsumexp", "reduce_precision",
+}
+_COLLECTIVES = {"psum", "all_gather", "psum_scatter", "all_to_all", "ppermute", "pmin", "pmax"}
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:  # noqa: BLE001
+        return 0
+
+
+def _bytes(aval) -> int:
+    try:
+        return _size(aval) * aval.dtype.itemsize
+    except Exception:  # noqa: BLE001
+        return 0
+
+
+class Costs:
+    __slots__ = ("flops", "bytes", "coll", "flags")
+
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll: Dict[str, float] = {}
+        self.flags: Dict[str, int] = {}
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+        for k, v in other.flags.items():
+            self.flags[k] = self.flags.get(k, 0) + v
+
+
+def _dot_general_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    batch = reduce(lambda a, b: a * b, (lhs.shape[i] for i in lb), 1)
+    contract = reduce(lambda a, b: a * b, (lhs.shape[i] for i in lc), 1)
+    m = _size(lhs) // max(batch * contract, 1)
+    n = _size(rhs) // max(batch * contract, 1)
+    return 2.0 * batch * m * n * contract
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval  # kernel
+    fg = eqn.params.get("feature_group_count", 1)
+    kernel_per_out = _size(rhs) // max(out.shape[-1] if out.shape else 1, 1)
+    return 2.0 * _size(out) * max(kernel_per_out // max(fg, 1), 1)
+
+
+def _io_bytes(eqn) -> float:
+    return float(
+        sum(_bytes(v.aval) for v in eqn.invars if hasattr(v, "aval"))
+        + sum(_bytes(v.aval) for v in eqn.outvars)
+    )
+
+
+def analyze_closed_jaxpr(closed, mesh_size: int, axis_sizes=None) -> Costs:
+    return _analyze(closed.jaxpr, mesh_size, axis_sizes or {})
+
+
+def _subjaxpr_cost(params_value, mesh_size, axis_sizes) -> Costs:
+    if hasattr(params_value, "jaxpr"):  # ClosedJaxpr
+        return _analyze(params_value.jaxpr, mesh_size, axis_sizes)
+    return _analyze(params_value, mesh_size, axis_sizes)
+
+
+def _analyze(jaxpr, mesh_size: int, axis_sizes) -> Costs:
+    total = Costs()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        c = Costs()
+        if name == "dot_general":
+            c.flops = _dot_general_flops(eqn)
+            c.bytes = _io_bytes(eqn)
+        elif name == "conv_general_dilated":
+            c.flops = _conv_flops(eqn)
+            c.bytes = _io_bytes(eqn)
+        elif name == "scan":
+            inner = _subjaxpr_cost(eqn.params["jaxpr"], mesh_size, axis_sizes)
+            length = eqn.params["length"]
+            c.add(inner, mult=length)
+            c.bytes += _io_bytes(eqn)  # xs/carry streaming
+        elif name == "while":
+            inner = _subjaxpr_cost(eqn.params["body_jaxpr"], mesh_size, axis_sizes)
+            c.add(inner, mult=1.0)
+            c.flags["while_body_counted_once"] = 1
+        elif name == "cond":
+            branches = eqn.params["branches"]
+            costs = [_subjaxpr_cost(b, mesh_size, axis_sizes) for b in branches]
+            c = max(costs, key=lambda x: x.flops)
+        elif name in ("pjit", "closed_call", "core_call", "remat", "remat2", "checkpoint", "custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr"):
+            key = "jaxpr" if "jaxpr" in eqn.params else ("call_jaxpr" if "call_jaxpr" in eqn.params else "fun_jaxpr")
+            if key in eqn.params:
+                c = _subjaxpr_cost(eqn.params[key], mesh_size, axis_sizes)
+        elif name == "shard_map":
+            inner = _subjaxpr_cost(eqn.params["jaxpr"], mesh_size, axis_sizes)
+            # body executes on every device; inner shapes are per-shard
+            c.add(inner, mult=float(mesh_size))
+        elif name in _COLLECTIVES:
+            payload = float(sum(_bytes(v.aval) for v in eqn.invars if hasattr(v, "aval")))
+            axes = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+            if not isinstance(axes, tuple):
+                axes = (axes,)
+            n = 1
+            for a in axes:
+                n *= int(axis_sizes.get(str(a), 1))
+            # Ring-model per-device link bytes:
+            #   all-reduce: 2(n-1)/n x payload;  all-gather: (n-1) x send
+            #   (every shard transits every link);  reduce-scatter /
+            #   all-to-all / permute: (n-1)/n x payload.
+            if name == "psum":
+                factor = 2.0 * (n - 1) / max(n, 1)
+            elif name == "all_gather":
+                factor = float(n - 1)
+            else:
+                factor = (n - 1) / max(n, 1)
+            key = ",".join(str(a) for a in axes) or "?"
+            c.coll[key] = c.coll.get(key, 0.0) + payload * factor
+            c.bytes = _io_bytes(eqn)
+        elif name in _ELEMENTWISE_FLOPS:
+            c.flops = float(sum(_size(v.aval) for v in eqn.outvars))
+            c.bytes = _io_bytes(eqn)
+        elif name.startswith("reduce_") or name in _REDUCE_FLOPS:
+            c.flops = float(sum(_size(v.aval) for v in eqn.invars if hasattr(v, "aval")))
+            c.bytes = _io_bytes(eqn)
+        else:
+            # data movement (reshape/transpose/gather/scatter/...) or cheap
+            c.bytes = _io_bytes(eqn)
+        total.add(c)
+    return total
+
+
+def analyze_fn(fn, args, mesh) -> Dict[str, Any]:
+    """jaxpr-level costs for fn(*args) on the given mesh (per-device)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    mesh_size = int(np.prod(list(mesh.shape.values())))
+    axis_sizes = {str(k): int(v) for k, v in mesh.shape.items()}
+    c = analyze_closed_jaxpr(closed, mesh_size, axis_sizes)
+    return {
+        "total_flops": c.flops,
+        "total_bytes": c.bytes,
+        "per_device_flops": c.flops / mesh_size,
+        "per_device_bytes": c.bytes / mesh_size,
+        "collective_bytes_per_device": {k: v / mesh_size for k, v in c.coll.items()},
+        "flags": c.flags,
+        "mesh_size": mesh_size,
+    }
+
+
+def analyze_cell(fn_or_lowered, mesh, meta, fn=None, args=None) -> Dict[str, Any]:
+    """Entry point used by the dry-run driver."""
+    if fn is not None:
+        return analyze_fn(fn, args, mesh)
+    return {"note": "jaxpr analysis requires fn/args; lowered-only cell"}

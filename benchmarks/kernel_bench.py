@@ -1,0 +1,69 @@
+"""Pallas kernel benchmarks + structural VMEM accounting (TPU target).
+
+Wall times below run the kernels in interpret mode on CPU — meaningful
+only as correctness-path checks, NOT perf; the perf-relevant output is the
+structural accounting: VMEM working set per replica vs the 16 MiB budget,
+vector-op count per row, and the paper-shape throughput model.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.configs.ising_qmc import CONFIG as PAPER
+from repro.core import ising
+from repro.kernels import ops
+
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def vmem_accounting(n: int, L: int, lanes: int = 128):
+    rows = (L // lanes) * n
+    state_bytes = rows * lanes * 4  # f32
+    arrays = {
+        "spins": state_bytes,
+        "h_space": state_bytes,
+        "h_tau": state_bytes,
+        "uniforms": state_bytes,
+        "outputs(3)": 3 * state_bytes,
+    }
+    total = sum(arrays.values())
+    return rows, arrays, total
+
+
+def run():
+    rows_out = []
+    # Paper production shape: 256 layers x 96 spins.
+    rows, arrays, total = vmem_accounting(PAPER.spins_per_layer, PAPER.num_layers)
+    rows_out.append(
+        ("kernel_vmem_paper_shape", 0.0,
+         f"{total/1024:.0f}KiB of {VMEM_BUDGET/1024/1024:.0f}MiB "
+         f"({total/VMEM_BUDGET:.1%}) rows={rows}")
+    )
+    max_replicas = VMEM_BUDGET // total
+    rows_out.append(
+        ("kernel_vmem_max_replicas_resident", 0.0, f"{max_replicas}")
+    )
+    # interpret-mode correctness-path timing (small shape).
+    m = ising.random_layered_model(n=4, L=256, seed=1, beta=1.0)
+    inputs = ops.make_kernel_inputs(m, batch=1, seed=0)
+    dt, _ = time_fn(lambda: ops.metropolis_sweep(*inputs, n=m.n), iters=2, warmup=1)
+    rows_out.append(
+        ("kernel_sweep_interpret_ms", dt * 1e6, f"{dt*1e3:.1f}ms (interpret mode)")
+    )
+    import jax.numpy as jnp
+    from repro.core import mt19937 as mt
+
+    st = mt.mt_init(np.arange(128, dtype=np.uint32))
+    dt, out = time_fn(lambda: ops.mt_next_block(st), iters=3, warmup=1)
+    rows_out.append(
+        ("kernel_mt19937_interpret", dt * 1e6,
+         f"{out[1].size/dt/1e6:.2f}Mrand/s (interpret mode)")
+    )
+    return rows_out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

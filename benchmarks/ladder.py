@@ -1,0 +1,64 @@
+"""Paper Table 1/2 + Figure 13/15: the optimization-ladder benchmark.
+
+Measures spin-updates/second for each implementation rung on the SAME
+workload (scaled-down from the paper's 256 layers x 96 spins so the CPU
+harness finishes in seconds; the full shape is config-selectable).
+
+JAX adaptation of the ladder (DESIGN.md §2): compiler optimization cannot
+be disabled (no A.xa/A.xb split) and branch misprediction has no analogue,
+so the JAX ladder is:
+
+  a1       edge-centric structures, exact exp  (paper A.1b)
+  a2       simplified layout + fastexp + bulk RNG (paper A.2b)
+  a3       vector RNG + vector flips, scalar updates (paper A.3)
+  a4       fully vectorized lane sweep (paper A.4)
+  pallas   the TPU kernel in interpret mode — correctness rung, not a perf
+           rung on CPU (interpret-mode timing is reported but marked)
+
+Paper's observed ratios for reference: A.2b/A.1b = 3.75x (1 core),
+A.4/A.2b = 3.16x, A.4/A.1b = 11.86x.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.configs.ising_qmc import IsingConfig
+from repro.core import ising, metropolis
+
+LADDER = ("a1", "a2", "a3", "a4")
+
+
+def run(cfg: IsingConfig | None = None, sweeps: int = 4, V: int = 128):
+    """V=128 is the TPU lane width (the paper's vector width was 4 on SSE,
+    32/128 on GPU).  On narrow V the XLA-CPU loop overhead swamps the lane
+    math and the ladder inverts — measured and recorded in EXPERIMENTS.md
+    (the paper's own point: vector width must amortize the bookkeeping)."""
+    cfg = cfg or IsingConfig(spins_per_layer=24, num_layers=2 * V, num_models=1)
+    m = ising.random_layered_model(
+        n=cfg.spins_per_layer, L=cfg.num_layers, seed=cfg.seed, beta=1.0
+    )
+    N = m.num_spins
+    rows = []
+    times = {}
+    for impl in LADDER:
+        n_sweeps = 1 if impl == "a3" else sweeps  # a3's per-lane loop is slow
+        fn, carry = metropolis.make_sweeper(m, impl, num_sweeps=n_sweeps, seed=42, V=V)
+        dt, _ = time_fn(fn, carry, iters=3, warmup=1)  # steady-state: jit cached
+        per_sweep = dt / n_sweeps
+        times[impl] = per_sweep
+        rows.append(
+            (f"ladder_{impl}", per_sweep * 1e6, f"{N / per_sweep / 1e6:.3f}Mspin/s")
+        )
+    # Speedup matrix (Table 2 analogue).
+    for a in LADDER:
+        for b in LADDER:
+            if a < b:
+                rows.append((f"speedup_{b}_over_{a}", 0.0, f"{times[a]/times[b]:.3f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,159 @@
+"""Roofline analysis over the dry-run results (deliverable g).
+
+Per (arch x shape) on the single-pod 16x16 mesh, derives the three terms:
+
+  compute    = FLOPs_per_chip / 197e12            (bf16 peak, TPU v5e)
+  memory     = HBM_bytes_per_chip / 819e9
+  collective = collective_bytes_per_chip / 50e9   (ICI per-link proxy)
+
+Sources and corrections (full accounting in hlo_analysis.py docstring):
+  * FLOPs: scan-aware jaxpr analyzer (XLA cost_analysis counts loop bodies
+    once — verified — so it cannot be used directly for scanned models).
+  * HBM bytes: two estimates are computed —
+      - jaxpr_bytes: per-primitive in+out traffic (fusion-blind UPPER bound)
+      - xla_scaled: XLA 'bytes accessed' (fusion-aware) scaled by the
+        jaxpr/XLA FLOPs ratio to undo the scan undercount (headline number)
+  * collective bytes: explicit collectives from the jaxpr (psum etc., exact
+    and scan-corrected) + the analytic Megatron-TP/FSDP model below for
+    GSPMD-inserted movement (which exists only post-partitioning; the
+    dry-run's compiled-HLO census evidences the ops).
+
+Analytic TP/FSDP collective model (per training step, per chip):
+  TP: each attention + MLP output projection contracts a model-sharded dim
+      -> all-reduce of the (B_local, S, d_model) bf16 activation.  Count:
+      2 per layer forward; remat doubles the forward; backward adds 2.
+      Ring all-reduce moves 2x payload.
+  FSDP: params gathered (bf16) once per forward (x2 under remat) and
+      gradients reduce-scattered (f32) once per step, over the data axis.
+  Serving (prefill/decode): forward-only, no FSDP reduce-scatter.
+
+MODEL_FLOPS: train 6*N*D; prefill 2*N*D; decode 2*N*B tokens — N = active
+params for MoE.  utilization = MODEL_FLOPS / total_jaxpr_FLOPs (catches
+remat/attention/dispatch overhead).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Dict
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per link (ICI proxy)
+
+
+def model_flops(meta: Dict[str, Any]) -> float:
+    n_act = meta["active_params"]
+    tokens = meta["global_batch"] * meta["seq_len"]
+    if meta["kind"] == "train":
+        return 6.0 * n_act * tokens
+    if meta["kind"] == "prefill":
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * meta["global_batch"]  # decode: one token per request
+
+
+def analytic_tp_fsdp_bytes(meta: Dict[str, Any], cfg) -> Dict[str, float]:
+    """Per-chip analytic collective bytes for GSPMD-inserted movement."""
+    mesh = meta["mesh"]
+    data = mesh.get("data", 1) * mesh.get("pod", 1)
+    kind = meta["kind"]
+    L = cfg.num_layers
+    d = cfg.d_model
+    if kind == "decode":
+        tokens_local = meta["global_batch"] / data  # one position
+    else:
+        tokens_local = meta["global_batch"] * meta["seq_len"] / data
+    act_payload = tokens_local * d * 2  # bf16
+    remat = 2 if (kind == "train" and cfg.remat) else 1
+    n_ar_per_layer = 2 * remat + (2 if kind == "train" else 0)
+    tp_bytes = L * n_ar_per_layer * 2.0 * act_payload  # ring AR = 2x payload
+    # FSDP param all-gather + grad reduce-scatter over the data axis.
+    frac = (data - 1) / data
+    params = meta["params"]
+    fsdp_bytes = 0.0
+    if kind == "train":
+        fsdp_bytes = params * 2 * remat * frac / 1.0  # AG bf16 per fwd pass
+        fsdp_bytes += params * 4 * frac  # RS f32 grads once
+        fsdp_bytes /= data  # per-chip share of the gathered payload
+    return {"tp_allreduce": tp_bytes, "fsdp": fsdp_bytes}
+
+
+def roofline_row(row: Dict[str, Any]) -> Dict[str, Any]:
+    from repro.configs.registry import get_config
+
+    meta = {k: row[k] for k in (
+        "arch", "shape", "kind", "mesh", "params", "active_params",
+        "seq_len", "global_batch",
+    )}
+    cfg = get_config(row["arch"])
+    an = row["analysis"]
+    chips = an["mesh_size"]
+    flops_pc = an["per_device_flops"]
+    jaxpr_bytes_pc = an["per_device_bytes"]
+    xla_flops_once = row["xla_cost"]["flops_body_once"]
+    xla_bytes_once = row["xla_cost"]["bytes_body_once"]
+    scale = (an["total_flops"] / xla_flops_once) if xla_flops_once > 0 else 1.0
+    xla_scaled_bytes_pc = xla_bytes_once * scale / chips if xla_bytes_once > 0 else jaxpr_bytes_pc
+
+    coll_explicit = sum(an["collective_bytes_per_device"].values())
+    coll_model = analytic_tp_fsdp_bytes(meta, cfg)
+    coll_pc = coll_explicit + sum(coll_model.values())
+
+    t_compute = flops_pc / PEAK_FLOPS
+    t_memory = xla_scaled_bytes_pc / HBM_BW
+    t_coll = coll_pc / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(meta)
+    util = mf / an["total_flops"] if an["total_flops"] else 0.0
+    # Roofline fraction: useful model flops per chip-second at the bound.
+    bound = max(terms.values())
+    frac = (mf / chips / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        **meta,
+        "terms_s": {k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": an["total_flops"],
+        "utilization_model_over_hlo": round(util, 4),
+        "roofline_fraction": round(frac, 4),
+        "collective_model_bytes": {k: round(v) for k, v in coll_model.items()},
+        "collective_explicit_bytes_pc": round(coll_explicit),
+        "memory_bytes_pc_jaxpr_upper": round(jaxpr_bytes_pc),
+        "memory_bytes_pc_xla_scaled": round(xla_scaled_bytes_pc),
+    }
+
+
+def run(results_path: str = "dryrun_results.json"):
+    with open(results_path) as f:
+        rows = json.load(f)
+    out = []
+    for row in rows:
+        if row.get("status") != "ok" or row.get("multi_pod") or "analysis" not in row:
+            continue
+        out.append(roofline_row(row))
+    return out
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | kind | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        t = r["terms_s"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | {t['compute']:.4f} | "
+            f"{t['memory']:.4f} | {t['collective']:.4f} | {r['dominant']} | "
+            f"{r['utilization_model_over_hlo']:.3f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = run(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json")
+    print(to_markdown(rows))
+    with open("roofline_table.json", "w") as f:
+        json.dump(rows, f, indent=1)

@@ -1,0 +1,41 @@
+"""Parallel tempering across a temperature ladder (paper §1 context).
+
+Runs replicas of one Ising model at a ladder of temperatures with periodic
+adjacent-temperature swap proposals (the paper's 115-model production
+setup, scaled down), demonstrating that tempering finds lower energies
+than independent quenches.
+
+  PYTHONPATH=src python examples/parallel_tempering.py
+"""
+
+import numpy as np
+
+from repro.core import ising, metropolis, tempering
+
+
+def main():
+    m = ising.random_layered_model(n=16, L=16, seed=3, beta=1.0)
+    betas = np.geomspace(0.2, 4.0, 10)
+
+    state, energies = tempering.run_parallel_tempering(
+        m, betas, num_rounds=30, V=4, seed=0, sweeps_per_round=2
+    )
+    acc = int(state.swap_accept)
+    prop = int(state.swap_propose)
+    cold_slot = int(np.asarray(state.betas).argmax())
+    print(f"swap acceptance: {acc}/{prop} = {acc/max(prop,1):.2%}")
+    print(f"energies per slot: {np.round(energies, 1)}")
+    print(f"coldest replica energy: {energies[cold_slot]:.2f}")
+
+    # Baseline: independent quench at the coldest temperature only.
+    mq = ising.random_layered_model(n=16, L=16, seed=3, beta=float(betas[-1]))
+    sq = ising.init_spins(mq, seed=0)
+    sq, _ = metropolis.run_sweeps(mq, sq, "a4", 60, seed=1, V=4)
+    e_quench = ising.energy(mq, sq)
+    print(f"independent quench at beta={betas[-1]:.1f}: {e_quench:.2f}")
+    print("tempering <= quench + tolerance:",
+          energies[cold_slot] <= e_quench + abs(e_quench) * 0.1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""End-to-end LM training example (deliverable b): trains a reduced
+qwen2.5-family model for a few hundred steps on CPU with the full
+production substrate — sharded params (1x1 mesh), prefetching data
+pipeline, checkpointing, straggler monitor — and verifies the loss drops.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    args = ap.parse_args()
+    losses = train_main([
+        "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps),
+        "--seq-len", "64", "--batch", "8",
+        "--lr", "3e-3", "--warmup", "20",
+    ])
+    drop = losses[0] - losses[-1]
+    print(f"loss drop over {args.steps} steps: {drop:.3f}")
+    assert drop > 0.5, "expected visible learning on the synthetic stream"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+# Arch registry imported lazily to avoid import cycles during config authoring:
+# use ``from repro.configs.registry import ARCHS, get_config``.

@@ -1,0 +1,91 @@
+"""Shared helpers for per-arch config modules: input specs per shape cell.
+
+``input_specs(cfg, shape)`` returns ``(step_kind, inputs)`` where inputs are
+``jax.ShapeDtypeStruct`` stand-ins (weak-type-correct, shardable, zero
+allocation) for every argument of the step function the cell lowers:
+
+  train   -> train_step(state, batch): here we return the batch; the state
+             comes from eval_shape over init elsewhere.
+  prefill -> apply(params, tokens, ...): the token batch.
+  decode  -> decode_step(params, token, caches, cur_len): token + abstract
+             caches built by eval_shape over the cache initializer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec, SkipCell
+from repro.models import decoder, encdec
+
+i32 = jnp.int32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def token_batch(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {}
+    text_len = S
+    if cfg.vlm_patches:
+        text_len = S - cfg.vlm_patches
+        batch["visual_embeds"] = sds((B, cfg.vlm_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.encdec:
+        batch["frames"] = sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    batch["tokens"] = sds((B, text_len), i32)
+    if shape.kind == "train":
+        batch["labels"] = sds((B, text_len), i32)
+    return batch
+
+
+def abstract_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.encdec:
+        frames = sds((batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        params_shape = jax.eval_shape(
+            lambda k: encdec.init_params(k, cfg), jax.random.PRNGKey(0)
+        )
+        from repro.nn.param import split_tree
+
+        values, _ = split_tree(params_shape)
+        return jax.eval_shape(
+            lambda p, f: encdec.init_decode_caches(p, f, cfg, max_len), values, frames
+        )
+    return jax.eval_shape(lambda: decoder.init_decode_caches(cfg, batch, max_len))
+
+
+DEFAULT_LONG_SKIP = (
+    "full quadratic attention: a 524288-token KV cache/attention pass is "
+    "out of scope for this arch (sub-quadratic models run this cell); see "
+    "DESIGN.md §Arch-applicability"
+)
+
+
+def input_specs(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    *,
+    allow_long: bool = False,
+) -> Tuple[str, Dict[str, Any]]:
+    if shape.name == "long_500k" and not allow_long:
+        raise SkipCell(f"{cfg.name} x long_500k: {DEFAULT_LONG_SKIP}")
+    if shape.kind in ("train", "prefill"):
+        return shape.kind, token_batch(cfg, shape)
+    # decode: one new token against a cache of seq_len.
+    B, S = shape.global_batch, shape.seq_len
+    cfg_d = dataclasses.replace(cfg, max_target_length=S + 8)
+    caches = abstract_decode_caches(cfg_d, B, S + 8)
+    inputs = {
+        "token": sds((B, 1), i32),
+        "caches": caches,
+        "cur_len": sds((), i32),
+    }
+    if cfg.encdec:
+        inputs["frames"] = sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return "decode", inputs

@@ -1,0 +1,43 @@
+"""deepseek-coder-33b [dense] — llama-arch [arXiv:2401.14196; hf].
+
+62L d_model=7168 56H (GQA kv=8) d_ff=19200 vocab=32256, head_dim=128,
+RMSNorm + SwiGLU, no biases, rope_theta=1e5 (DeepSeek-Coder uses 100000
+with linear scaling for the 16K context).
+"""
+
+import dataclasses
+
+from repro.configs import common
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    num_layers=62,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=19200,
+    vocab_size=32256,
+    rope_theta=1e5,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=160,
+        vocab_size=512,
+        q_chunk=16,
+        kv_chunk=16,
+    )
+
+
+def input_specs(shape, cfg=None):
+    return common.input_specs(cfg or CONFIG, shape)

@@ -1,0 +1,31 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+ARCHS: Dict[str, str] = {
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "deepseek-coder-33b": "repro.configs.deepseek_coder_33b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "ising-qmc": "repro.configs.ising_qmc",
+}
+
+
+def get_module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[arch])
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = get_module(arch)
+    return mod.smoke_config() if smoke else mod.CONFIG

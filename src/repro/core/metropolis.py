@@ -1,0 +1,394 @@
+"""The Metropolis sweep ladder (paper Table 1), as pure-JAX implementations.
+
+Every implementation level of the paper is reproduced with the *same
+semantics* expressed over its own memory layout, so rungs can be compared
+both for bit-exactness (same exp flavour, same uniforms) and for wall-clock
+(the benchmark harness):
+
+  A.1  ``sweep_original``   — edge-centric structures of Figure 4; the
+       neighbour select and tau/space select of Figure 2; 2*S_mul*J
+       recomputed per edge (no result caching); exact exp by default.
+  A.2  ``sweep_flat``       — simplified per-spin layout of Figure 5/6
+       (pre-doubled J, tau edges last), bulk RNG, fastexp.
+  A.3  ``sweep_lane(..., scalar_updates=True)`` — vectorized RNG+flip
+       probability, scalar neighbour updates.
+  A.4  ``sweep_lane``       — fully vectorized: V-lane interlaced layout
+       (reorder.py), masked vector flips, whole-row neighbour updates,
+       lane-rotated wrap rows as the special case.
+
+Hardware note (DESIGN.md §Adaptation): branch elimination (§2.1) has no
+direct JAX analogue — XLA always lowers to select/mask — so the A.1->A.2
+delta here measures the data-structure and caching effects only.
+
+All sweeps consume a pre-generated buffer of uniforms, one per spin visit
+(the paper's bulk-RNG "result caching", §2.3).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import ising, mt19937, reorder
+from repro.core.fastexp import EXP_FNS
+
+f32 = jnp.float32
+
+
+class FlatState(NamedTuple):
+    spins: jax.Array  # (N,) float32 in {-1, +1}
+    h_space: jax.Array  # (N,) float32, includes local field h
+    h_tau: jax.Array  # (N,) float32
+
+
+class LaneState(NamedTuple):
+    spins: jax.Array  # (rows, V)
+    h_space: jax.Array  # (rows, V)
+    h_tau: jax.Array  # (rows, V)
+
+
+def make_flat_state(m: ising.LayeredModel, spins: np.ndarray) -> FlatState:
+    hs, ht = ising.h_eff_from_scratch(m, spins)
+    return FlatState(jnp.asarray(spins, f32), jnp.asarray(hs), jnp.asarray(ht))
+
+
+def make_lane_state(m: ising.LayeredModel, spins: np.ndarray, V: int) -> LaneState:
+    hs, ht = ising.h_eff_from_scratch(m, spins)
+    lane = lambda x: jnp.asarray(reorder.to_lane(x, m.n, m.L, V))
+    return LaneState(lane(np.asarray(spins, np.float32)), lane(hs), lane(ht))
+
+
+def _flip(s, h_sum, u, beta, exp_fn):
+    """Metropolis accept test; returns (S_mul = s*mask, new spin).
+
+    p = exp(-2 beta s h_eff); accept if u < p.  The identical expression is
+    used by every rung so layouts can be compared bit-exactly.
+    """
+    x = (f32(-2.0) * f32(beta)) * s * h_sum
+    p = exp_fn(x)
+    mask = (u < p).astype(f32)
+    return s * mask, s * (f32(1.0) - f32(2.0) * mask)
+
+
+# -----------------------------------------------------------------------------
+# A.1 — original edge-centric structures (Figure 2 / Figure 4).
+# -----------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("exp_flavor", "num_incident"))
+def sweep_original(
+    state: FlatState,
+    graph_edges: jax.Array,  # (E, 2) int32
+    J: jax.Array,  # (E,) float32 (NOT pre-doubled)
+    is_tau: jax.Array,  # (E,) bool
+    incident: jax.Array,  # (N, D) int32 edge ids
+    u: jax.Array,  # (N,) uniforms
+    beta: float,
+    exp_flavor: str = "exact",
+    num_incident: int | None = None,
+) -> FlatState:
+    exp_fn = EXP_FNS[exp_flavor]
+    D = incident.shape[1] if num_incident is None else num_incident
+
+    def spin_step(t, carry):
+        spins, hs, ht = carry
+        s = spins[t]
+        smul, s_new = _flip(s, hs[t] + ht[t], u[t], beta, exp_fn)
+
+        def edge_step(d, hsht):
+            hs, ht = hsht
+            e = incident[t, d]
+            ends = graph_edges[e]
+            # Figure 3: branch-free neighbour select via comparison-as-index.
+            nbr = ends[(ends[0] == t).astype(jnp.int32)]
+            val = f32(2.0) * smul * J[e]  # recomputed every edge (A.1 style)
+            tau = is_tau[e]
+            hs = hs.at[nbr].add(jnp.where(tau, f32(0.0), -val))
+            ht = ht.at[nbr].add(jnp.where(tau, -val, f32(0.0)))
+            return hs, ht
+
+        hs, ht = lax.fori_loop(0, D, edge_step, (hs, ht))
+        return spins.at[t].set(s_new), hs, ht
+
+    out = lax.fori_loop(0, state.spins.shape[0], spin_step, tuple(state))
+    return FlatState(*out)
+
+
+# -----------------------------------------------------------------------------
+# A.2 — simplified per-spin layout (Figure 5/6): tau edges are the last two
+# slots, J pre-doubled, one fused update line.
+# -----------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("exp_flavor", "space_degree"))
+def sweep_flat(
+    state: FlatState,
+    targets: jax.Array,  # (N, D) int32
+    J2: jax.Array,  # (N, D) float32, pre-doubled
+    u: jax.Array,  # (N,)
+    beta: float,
+    space_degree: int,
+    exp_flavor: str = "fast",
+) -> FlatState:
+    exp_fn = EXP_FNS[exp_flavor]
+    sd = space_degree
+
+    def spin_step(t, carry):
+        spins, hs, ht = carry
+        s = spins[t]
+        smul, s_new = _flip(s, hs[t] + ht[t], u[t], beta, exp_fn)
+        contrib = -smul * J2[t]  # == -= 2*S_mul*J with J pre-doubled
+        hs = hs.at[targets[t, :sd]].add(contrib[:sd])
+        ht = ht.at[targets[t, sd:]].add(contrib[sd:])
+        return spins.at[t].set(s_new), hs, ht
+
+    out = lax.fori_loop(0, state.spins.shape[0], spin_step, tuple(state))
+    return FlatState(*out)
+
+
+# -----------------------------------------------------------------------------
+# A.3 / A.4 — lane-interlaced vectorized sweep (Figure 12b, §3.1).
+# -----------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "exp_flavor", "scalar_updates")
+)
+def sweep_lane(
+    state: LaneState,
+    base_nbr: jax.Array,  # (n, SD) int32 in-layer neighbour site ids
+    base_J2: jax.Array,  # (n, SD) float32, pre-doubled (identical every layer)
+    tau_J2: jax.Array,  # (n,) float32, pre-doubled
+    u: jax.Array,  # (rows, V) uniforms
+    beta: float,
+    n: int,
+    exp_flavor: str = "fast",
+    scalar_updates: bool = False,
+) -> LaneState:
+    """One vectorized Metropolis sweep over the lane-interlaced layout.
+
+    All V lanes of a row flip together (they are mutually non-adjacent by
+    construction).  Space neighbours of a row form whole rows; tau
+    neighbours are rows +-n, same lane, except in the first/last layer block
+    where the contribution rotates across lanes (wrap between sections).
+    ``scalar_updates=True`` degrades the neighbour updates to a per-lane
+    loop — the paper's A.3 rung (vector RNG+flip, scalar updates).
+    """
+    exp_fn = EXP_FNS[exp_flavor]
+    rows, V = state.spins.shape
+    sd = base_nbr.shape[1]
+
+    def scatter_add(arr, row, contrib):
+        if scalar_updates:
+            def lane_step(v, a):
+                return a.at[row, v].add(contrib[v])
+            return lax.fori_loop(0, V, lane_step, arr)
+        return arr.at[row].add(contrib)
+
+    def row_step(q, carry, wrap):
+        spins, hs, ht = carry
+        s = spins[q]
+        smul, s_new = _flip(s, hs[q] + ht[q], u[q], beta, exp_fn)
+        spins = spins.at[q].set(s_new)
+        i = jnp.remainder(q, n)
+        base = q - i
+        nbrs = base_nbr[i]  # (SD,) same for every layer: the paper's
+        j2 = base_J2[i]  # "topologically identical" exploitation
+        for d in range(sd):  # static unroll, SD ~ 4-6
+            hs = scatter_add(hs, base + nbrs[d], -smul * j2[d])
+        tc = -smul * tau_J2[i]  # tau contribution, both directions
+        if wrap == -1:  # first layer of each section: down-link wraps
+            ht = scatter_add(ht, rows - n + i, jnp.roll(tc, -1))
+            ht = scatter_add(ht, q + n, tc)
+        elif wrap == +1:  # last layer of each section: up-link wraps
+            ht = scatter_add(ht, q - n, tc)
+            ht = scatter_add(ht, i, jnp.roll(tc, 1))
+        else:
+            ht = scatter_add(ht, q - n, tc)
+            ht = scatter_add(ht, q + n, tc)
+        return spins, hs, ht
+
+    carry = tuple(state)
+    carry = lax.fori_loop(0, n, functools.partial(row_step, wrap=-1), carry)
+    carry = lax.fori_loop(n, rows - n, functools.partial(row_step, wrap=0), carry)
+    carry = lax.fori_loop(rows - n, rows, functools.partial(row_step, wrap=+1), carry)
+    return LaneState(*carry)
+
+
+# -----------------------------------------------------------------------------
+# Drivers: bulk RNG + scan over sweeps, per implementation rung.
+# -----------------------------------------------------------------------------
+
+LADDER = ("a1", "a2", "a3", "a4")
+
+
+def _uniform_buffer(rng_state, count: int):
+    blocks = -(-count // mt19937.N)  # ceil
+    rng_state, u = mt19937.mt_uniform_blocks(rng_state, blocks)
+    return rng_state, u
+
+
+def make_sweeper(
+    m: ising.LayeredModel,
+    impl: str,
+    *,
+    num_sweeps: int = 1,
+    seed: int = 1234,
+    exp_flavor: str | None = None,
+    V: int = 4,
+):
+    """Build (jitted_fn, initial_carry) for steady-state benchmarking.
+
+    ``jitted_fn(carry) -> carry`` runs ``num_sweeps`` sweeps; the callable is
+    created ONCE so repeated timing calls hit the compile cache (run_sweeps
+    re-closes over the model every call and re-traces — fine for tests, not
+    for wall-clock measurement).
+    """
+    N = m.num_spins
+    if impl == "a1":
+        exp_flavor = exp_flavor or "exact"
+        ge, J, istau, incident = (jnp.asarray(x) for x in ising.original_arrays(m))
+        state0 = make_flat_state(m, ising.init_spins(m, seed))
+        rng0 = mt19937.mt_init(seed)
+
+        @jax.jit
+        def fn(carry):
+            def step(c, _):
+                st, rng = c
+                rng, u = _uniform_buffer(rng, N)
+                st = sweep_original(st, ge, J, istau, incident, u[:N], m.beta, exp_flavor)
+                return (st, rng), None
+
+            return lax.scan(step, carry, None, length=num_sweeps)[0]
+
+        return fn, (state0, rng0)
+    if impl == "a2":
+        exp_flavor = exp_flavor or "fast"
+        targets, J2 = (jnp.asarray(x) for x in ising.flat_arrays(m))
+        state0 = make_flat_state(m, ising.init_spins(m, seed))
+        rng0 = mt19937.mt_init(seed)
+
+        @jax.jit
+        def fn(carry):
+            def step(c, _):
+                st, rng = c
+                rng, u = _uniform_buffer(rng, N)
+                st = sweep_flat(st, targets, J2, u[:N], m.beta, m.space_degree, exp_flavor)
+                return (st, rng), None
+
+            return lax.scan(step, carry, None, length=num_sweeps)[0]
+
+        return fn, (state0, rng0)
+    if impl in ("a3", "a4"):
+        exp_flavor = exp_flavor or "fast"
+        rows = reorder.check_lane_shape(m.n, m.L, V)
+        state0 = make_lane_state(m, ising.init_spins(m, seed), V)
+        base_nbr = jnp.asarray(m.space_nbr)
+        base_J2 = jnp.asarray(2.0 * m.space_J)
+        tau_J2 = jnp.asarray(2.0 * m.tau_J)
+        rng0 = mt19937.mt_init(np.arange(V, dtype=np.uint32) * 2654435761 + seed)
+
+        @jax.jit
+        def fn(carry):
+            def step(c, _):
+                st, rng = c
+                rng, u = _uniform_buffer(rng, rows)
+                st = sweep_lane(
+                    st, base_nbr, base_J2, tau_J2, u[:rows], m.beta, m.n,
+                    exp_flavor, scalar_updates=(impl == "a3"),
+                )
+                return (st, rng), None
+
+            return lax.scan(step, carry, None, length=num_sweeps)[0]
+
+        return fn, (state0, rng0)
+    raise ValueError(impl)
+
+
+def run_sweeps(
+    m: ising.LayeredModel,
+    spins: np.ndarray,
+    impl: str,
+    num_sweeps: int,
+    *,
+    seed: int = 1234,
+    exp_flavor: str | None = None,
+    V: int = 4,
+):
+    """Run ``num_sweeps`` Metropolis sweeps with the given ladder rung.
+
+    Returns final spins in FLAT (layer-major) order regardless of rung, so
+    results are directly comparable across the ladder.
+    """
+    N = m.num_spins
+    if impl == "a1":
+        exp_flavor = exp_flavor or "exact"
+        ge, J, istau, incident = (jnp.asarray(x) for x in ising.original_arrays(m))
+        state = make_flat_state(m, spins)
+        rng = mt19937.mt_init(seed)  # single scalar generator, like A.1
+
+        def step(carry, _):
+            state, rng = carry
+            rng, u = _uniform_buffer(rng, N)
+            state = sweep_original(
+                state, ge, J, istau, incident, u[:N], m.beta, exp_flavor
+            )
+            return (state, rng), None
+
+        (state, _), _ = lax.scan(step, (state, rng), None, length=num_sweeps)
+        return np.asarray(state.spins), state
+
+    if impl == "a2":
+        exp_flavor = exp_flavor or "fast"
+        targets, J2 = (jnp.asarray(x) for x in ising.flat_arrays(m))
+        state = make_flat_state(m, spins)
+        rng = mt19937.mt_init(seed)
+
+        def step(carry, _):
+            state, rng = carry
+            rng, u = _uniform_buffer(rng, N)
+            state = sweep_flat(
+                state, targets, J2, u[:N], m.beta, m.space_degree, exp_flavor
+            )
+            return (state, rng), None
+
+        (state, _), _ = lax.scan(step, (state, rng), None, length=num_sweeps)
+        return np.asarray(state.spins), state
+
+    if impl in ("a3", "a4"):
+        exp_flavor = exp_flavor or "fast"
+        rows = reorder.check_lane_shape(m.n, m.L, V)
+        state = make_lane_state(m, spins, V)
+        base_nbr = jnp.asarray(m.space_nbr)
+        base_J2 = jnp.asarray(2.0 * m.space_J)
+        tau_J2 = jnp.asarray(2.0 * m.tau_J)
+        # V interlaced generators with distinct seeds (§3: different seeds,
+        # working in parallel).
+        rng = mt19937.mt_init(np.arange(V, dtype=np.uint32) * 2654435761 + seed)
+
+        def step(carry, _):
+            state, rng = carry
+            rng, u = _uniform_buffer(rng, rows)
+            state = sweep_lane(
+                state,
+                base_nbr,
+                base_J2,
+                tau_J2,
+                u[:rows],
+                m.beta,
+                m.n,
+                exp_flavor,
+                scalar_updates=(impl == "a3"),
+            )
+            return (state, rng), None
+
+        (state, _), _ = lax.scan(step, (state, rng), None, length=num_sweeps)
+        flat = reorder.from_lane(np.asarray(state.spins), m.n, m.L, V)
+        return flat, state
+
+    raise ValueError(f"unknown impl {impl!r}; choose from {LADDER}")

@@ -1,0 +1,83 @@
+"""Spin reordering for conflict-free vector updates (paper §3.1, Figure 12).
+
+The fully-vectorized sweep requires that the V spins processed together
+(one per vector lane) are mutually non-adjacent and that their neighbours
+again form whole vectors.  The paper achieves this by splitting the L
+identical layers into V sections and interlacing them:
+
+    spin (layer l, site i)  ->  row = (l mod L/V) * n + i,   lane = l div L/V
+
+Rows are visited sequentially; all V lanes of a row flip together.  Tau
+neighbours live exactly one row-block (n rows) up/down in the SAME lane,
+except at section boundaries where the contribution rotates one lane over
+(the paper's "first and last layers treated as a special case").
+
+V=4 reproduces the paper's SSE layout (Figure 12b); V=128 is the TPU lane
+width and plays the role of the paper's 32/128-way GPU memory coalescing
+(Figure 12c).  Requires L % V == 0 and L // V >= 2.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ising
+
+
+def check_lane_shape(n: int, L: int, V: int) -> int:
+    if L % V != 0:
+        raise ValueError(f"L={L} must be a multiple of V={V}")
+    lpv = L // V
+    if lpv < 2:
+        raise ValueError(
+            f"L//V={lpv} < 2: spins in a vector would be tau-adjacent "
+            "(the paper's reordering requires at least 2 layers per section)"
+        )
+    return lpv * n  # rows
+
+
+def flat_to_lane_perm(n: int, L: int, V: int) -> np.ndarray:
+    """perm[row * V + lane] = flat spin id (layer-major) occupying that slot."""
+    rows = check_lane_shape(n, L, V)
+    lpv = L // V
+    perm = np.empty(rows * V, dtype=np.int64)
+    for v in range(V):
+        for p in range(lpv):
+            l = v * lpv + p
+            for i in range(n):
+                perm[(p * n + i) * V + v] = l * n + i
+    return perm
+
+
+def to_lane(x_flat: np.ndarray, n: int, L: int, V: int) -> np.ndarray:
+    """Gather a flat (N, ...) per-spin array into (rows, V, ...) lane layout."""
+    rows = check_lane_shape(n, L, V)
+    perm = flat_to_lane_perm(n, L, V)
+    return np.asarray(x_flat)[perm].reshape((rows, V) + np.asarray(x_flat).shape[1:])
+
+
+def from_lane(x_lane: np.ndarray, n: int, L: int, V: int) -> np.ndarray:
+    rows = check_lane_shape(n, L, V)
+    perm = flat_to_lane_perm(n, L, V)
+    out = np.empty((rows * V,) + np.asarray(x_lane).shape[2:], dtype=np.asarray(x_lane).dtype)
+    out[perm] = np.asarray(x_lane).reshape((rows * V,) + np.asarray(x_lane).shape[2:])
+    # out[perm] = lane-ordered values: out[flat_id] = value at lane slot.
+    return out
+
+
+def relabeled_flat_arrays(m: ising.LayeredModel, V: int):
+    """Flat (targets, J2) arrays for the model with spins RELABELED to lane
+    order (new id = row * V + lane).
+
+    Running the sequential reference sweep over this relabeled model in
+    natural id order visits spins in exactly the order the vectorized sweep
+    processes them — the bit-exact equivalence oracle for A.4 and the Pallas
+    kernel (possible because lanes within a row are mutually non-adjacent).
+    """
+    targets, J2 = ising.flat_arrays(m)
+    perm = flat_to_lane_perm(m.n, m.L, V)  # new -> old
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.size)  # old -> new
+    new_targets = inv[targets[perm]].astype(np.int32)
+    new_J2 = J2[perm]
+    return new_targets, new_J2

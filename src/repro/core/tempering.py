@@ -1,0 +1,194 @@
+"""Parallel tempering over a ladder of inverse temperatures (paper §1, [16][17]).
+
+The paper's production context runs 115 replicas of each Ising model at
+different temperatures and periodically proposes swaps between adjacent
+temperatures.  Here replicas are vmapped over the lane-vectorized sweep and
+swaps exchange *betas* (equivalently, exchange replica labels), the standard
+O(1) formulation.
+
+Swap rule for adjacent replicas (a, b):  accept with probability
+``min(1, exp((beta_a - beta_b) * (E_a - E_b)))`` — computed with the same
+fastexp used for flips, clamped >= 1 for favourable swaps.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import ising, metropolis, mt19937, reorder
+from repro.core.fastexp import EXP_FNS
+
+f32 = jnp.float32
+
+
+class PTState(NamedTuple):
+    spins: jax.Array  # (R, rows, V)
+    h_space: jax.Array  # (R, rows, V)
+    h_tau: jax.Array  # (R, rows, V)
+    betas: jax.Array  # (R,) current beta per replica slot
+    rng: jax.Array  # (624, R*V) interlaced generator state
+    swap_rng: jax.Array  # (624,) scalar generator for swap decisions
+    swap_accept: jax.Array  # () int32 counter
+    swap_propose: jax.Array  # () int32 counter
+
+
+def init_pt(
+    m: ising.LayeredModel,
+    betas: np.ndarray,
+    *,
+    V: int = 4,
+    seed: int = 0,
+) -> PTState:
+    R = len(betas)
+    states = []
+    for r in range(R):
+        sp = ising.init_spins(m, seed=seed * 1000 + r)
+        states.append(metropolis.make_lane_state(m, sp, V))
+    stack = lambda xs: jnp.stack(xs)
+    lane_states = [stack([s[i] for s in states]) for i in range(3)]
+    rng = mt19937.mt_init(
+        (np.arange(R * V, dtype=np.uint32) * 2654435761 + seed) & 0xFFFFFFFF
+    )
+    return PTState(
+        *lane_states,
+        betas=jnp.asarray(betas, f32),
+        rng=rng,
+        swap_rng=mt19937.mt_init(seed + 17),
+        swap_accept=jnp.int32(0),
+        swap_propose=jnp.int32(0),
+    )
+
+
+def lane_energy(
+    spins: jax.Array,  # (rows, V)
+    h: jax.Array,  # (n,) local fields
+    base_nbr: jax.Array,
+    base_J: jax.Array,  # (n, SD) NOT doubled
+    tau_J: jax.Array,  # (n,)
+    n: int,
+) -> jax.Array:
+    """Energy of one lane-layout replica (fully vectorized, no loop over rows)."""
+    rows, V = spins.shape
+    lpv = rows // n
+    s = spins.reshape(lpv, n, V)
+    e = -jnp.sum(h[None, :, None] * s)
+    # Space terms: each undirected edge counted twice -> halve.
+    for d in range(base_nbr.shape[1]):
+        e -= 0.5 * jnp.sum(base_J[None, :, d, None] * s * s[:, base_nbr[:, d], :])
+    # Tau terms: neighbour is next row-block; on the last block the next
+    # layer is the first block of lane v+1 (global wrap lane V-1 -> 0).
+    up = jnp.concatenate([s[1:], jnp.roll(s[:1], -1, axis=-1)], axis=0)
+    e -= jnp.sum(tau_J[None, :, None] * s * up)
+    return e
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "sweeps_per_round", "exp_flavor")
+)
+def pt_round(
+    state: PTState,
+    base_nbr: jax.Array,
+    base_J2: jax.Array,
+    tau_J2: jax.Array,
+    h: jax.Array,
+    swap_parity: jax.Array,  # 0 or 1: which adjacent pairs are proposed
+    n: int,
+    sweeps_per_round: int = 1,
+    exp_flavor: str = "fast",
+) -> PTState:
+    """``sweeps_per_round`` vectorized sweeps on every replica, then one
+    even/odd round of adjacent-temperature swap proposals."""
+    R, rows, V = state.spins.shape
+    exp_fn = EXP_FNS[exp_flavor]
+
+    # --- sweeps (vmapped over replicas; each replica has its own beta) ---
+    def one_replica(spins, hs, ht, beta, u):
+        st = metropolis.LaneState(spins, hs, ht)
+        st = metropolis.sweep_lane(
+            st, base_nbr, base_J2, tau_J2, u, beta, n, exp_flavor
+        )
+        return st
+
+    rng = state.rng
+    spins, hs, ht = state.spins, state.h_space, state.h_tau
+    for _ in range(sweeps_per_round):
+        rng, u = mt19937.mt_uniform_blocks(rng, -(-rows // mt19937.N))
+        u = u[:rows].reshape(rows, R, V).transpose(1, 0, 2)
+        st = jax.vmap(one_replica)(spins, hs, ht, state.betas, u)
+        spins, hs, ht = st.spins, st.h_space, st.h_tau
+
+    # --- swap phase ---
+    base_J = base_J2 * f32(0.5)
+    tau_J = tau_J2 * f32(0.5)
+    energies = jax.vmap(lambda s: lane_energy(s, h, base_nbr, base_J, tau_J, n))(
+        spins
+    )
+    swap_rng, su = mt19937.mt_uniform_blocks(state.swap_rng, 1)
+    # Propose swaps between (i, i+1) for i of the given parity.
+    idx = jnp.arange(R)
+    is_left = (idx % 2 == swap_parity) & (idx + 1 < R)
+    partner = jnp.where(is_left, idx + 1, jnp.where((idx % 2) != swap_parity, idx - 1, idx))
+    partner = jnp.clip(partner, 0, R - 1)
+    valid = partner != idx
+    d_beta = state.betas - state.betas[partner]
+    d_e = energies - energies[partner]
+    p_acc = exp_fn(jnp.clip(d_beta * d_e, -20.0, 0.0))  # min(1, exp(.))
+    u_pair = su[idx // 2 % mt19937.N]  # shared uniform per pair
+    u_pair = jnp.where(is_left, u_pair, u_pair[partner])
+    accept = valid & (u_pair < p_acc)
+    # Betas move between replica slots; spins stay put.
+    new_betas = jnp.where(accept, state.betas[partner], state.betas)
+    n_acc = jnp.sum(accept.astype(jnp.int32)) // 2
+    n_prop = jnp.sum((valid & is_left).astype(jnp.int32))
+    return PTState(
+        spins,
+        hs,
+        ht,
+        new_betas,
+        rng,
+        swap_rng,
+        state.swap_accept + n_acc,
+        state.swap_propose + n_prop,
+    )
+
+
+def run_parallel_tempering(
+    m: ising.LayeredModel,
+    betas: np.ndarray,
+    num_rounds: int,
+    *,
+    V: int = 4,
+    seed: int = 0,
+    sweeps_per_round: int = 1,
+    exp_flavor: str = "fast",
+):
+    """Driver: returns (final PTState, per-slot energies)."""
+    state = init_pt(m, betas, V=V, seed=seed)
+    base_nbr = jnp.asarray(m.space_nbr)
+    base_J2 = jnp.asarray(2.0 * m.space_J)
+    tau_J2 = jnp.asarray(2.0 * m.tau_J)
+    h = jnp.asarray(m.h)
+    for r in range(num_rounds):
+        state = pt_round(
+            state,
+            base_nbr,
+            base_J2,
+            tau_J2,
+            h,
+            jnp.int32(r % 2),
+            m.n,
+            sweeps_per_round,
+            exp_flavor,
+        )
+    base_J = base_J2 * 0.5
+    tau_J = tau_J2 * 0.5
+    energies = jax.vmap(
+        lambda s: lane_energy(s, h, base_nbr, base_J, tau_J, m.n)
+    )(state.spins)
+    return state, np.asarray(energies)

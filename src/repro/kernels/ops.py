@@ -1,0 +1,104 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret=None`` auto-selects: Pallas compiled path on TPU backends,
+interpret mode (Python-evaluated kernel bodies) everywhere else — this is
+how the kernels are validated on CPU per the project contract.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ising, metropolis, reorder
+from repro.kernels import fastexp_kernel, metropolis_kernel, mt19937_kernel
+
+LANES = 128
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def fastexp(x: jax.Array, flavor: str = "fast", interpret=None) -> jax.Array:
+    """Bit-trick exp on arbitrary-shaped f32 input (pads to lane tiles)."""
+    interpret = _auto_interpret(interpret)
+    flat = jnp.ravel(x)
+    pad = (-flat.size) % LANES
+    padded = jnp.pad(flat, (0, pad)) if pad else flat
+    out = fastexp_kernel.fastexp_2d(
+        padded.reshape(-1, LANES), flavor=flavor, interpret=interpret
+    )
+    return out.reshape(-1)[: flat.size].reshape(x.shape)
+
+
+def mt_next_block(state: jax.Array, interpret=None):
+    """Advance (624, V) interlaced MT19937 state; V padded to 128 multiple."""
+    interpret = _auto_interpret(interpret)
+    v = state.shape[1]
+    pad = (-v) % LANES
+    if pad:
+        # Pad with dummy generators (state lanes of zeros are still valid
+        # uint32 math; outputs on padded lanes are discarded).
+        state = jnp.pad(state, ((0, 0), (0, pad)))
+    new_state, out = mt19937_kernel.mt_next_block_kernel(state, interpret=interpret)
+    return new_state[:, :v], out[:, :v]
+
+
+def metropolis_sweep(
+    spins,
+    h_space,
+    h_tau,
+    u,
+    base_nbr,
+    base_J2,
+    tau_J2,
+    beta,
+    n: int,
+    exp_flavor: str = "fast",
+    interpret=None,
+):
+    """Batched vectorized Metropolis sweep; see metropolis_kernel."""
+    interpret = _auto_interpret(interpret)
+    return metropolis_kernel.metropolis_sweep_kernel(
+        spins,
+        h_space,
+        h_tau,
+        u,
+        base_nbr,
+        base_J2,
+        jnp.reshape(tau_J2, (-1, 1)),
+        jnp.reshape(beta, (-1, 1)),
+        n,
+        exp_flavor,
+        interpret,
+    )
+
+
+def make_kernel_inputs(m: ising.LayeredModel, batch: int, *, seed: int = 0):
+    """Build (spins, hs, ht, u, tables..., beta) kernel inputs for ``batch``
+    replicas of model ``m`` with V=128 lane interlacing."""
+    reorder.check_lane_shape(m.n, m.L, LANES)
+    states = []
+    rng = np.random.default_rng(seed)
+    for b in range(batch):
+        sp = ising.init_spins(m, seed=seed * 131 + b)
+        states.append(metropolis.make_lane_state(m, sp, LANES))
+    spins = jnp.stack([s.spins for s in states])
+    hs = jnp.stack([s.h_space for s in states])
+    ht = jnp.stack([s.h_tau for s in states])
+    u = jnp.asarray(rng.random(spins.shape, dtype=np.float32))
+    beta = jnp.full((batch,), m.beta, jnp.float32)
+    return (
+        spins,
+        hs,
+        ht,
+        u,
+        jnp.asarray(m.space_nbr),
+        jnp.asarray(2.0 * m.space_J),
+        jnp.asarray(2.0 * m.tau_J),
+        beta,
+    )

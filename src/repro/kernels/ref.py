@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function computes exactly what the corresponding kernel computes, using
+only jax.numpy / core modules — no Pallas.  Kernel tests sweep shapes and
+dtypes and assert allclose (bit-exact for the integer RNG) against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fastexp as fx
+from repro.core import metropolis as mp
+from repro.core import mt19937 as mt
+
+
+def fastexp_ref(x: jax.Array, flavor: str = "fast") -> jax.Array:
+    return fx.EXP_FNS[flavor](x)
+
+
+def mt_next_block_ref(state: jax.Array):
+    new = mt.mt_twist(state)
+    return new, mt.mt_temper(new)
+
+
+def metropolis_sweep_ref(
+    spins, h_space, h_tau, u, base_nbr, base_J2, tau_J2, beta, n, exp_flavor="fast"
+):
+    """Batched lane-sweep oracle: vmap of the core A.4 implementation."""
+
+    def one(s, hs, ht, uu, b):
+        st = mp.sweep_lane(
+            mp.LaneState(s, hs, ht),
+            base_nbr,
+            base_J2,
+            tau_J2.reshape(-1),
+            uu,
+            b,
+            n,
+            exp_flavor,
+        )
+        return st.spins, st.h_space, st.h_tau
+
+    return jax.vmap(one)(spins, h_space, h_tau, u, beta.reshape(-1))

@@ -1,0 +1,319 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count on first init).  512 host devices back both production meshes:
+16x16 single-pod and 2x16x16 multi-pod.
+
+Per cell this driver:
+  1. builds the production mesh + sharding ctx (logical->physical rules),
+  2. eval_shape's the model init -> fully-sharded abstract params/state,
+  3. jits the step function with explicit in_shardings and donation,
+  4. ``.lower().compile()`` — sharding mismatches, unsupported collectives
+     or compile-time OOM fail HERE, which is the point of the exercise,
+  5. records memory_analysis / cost_analysis / a census of collectives in
+     the optimized HLO, plus scan-corrected analytic costs (see
+     benchmarks/hlo_analysis.py; XLA's cost_analysis counts while-loop
+     bodies once) into a JSON row for EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, SkipCell
+from repro.configs.registry import ARCHS, get_config, get_module
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import decoder, encdec
+from repro.nn.param import split_tree
+from repro.optim.adamw import AdamWConfig
+from repro.sharding import ShardingCtx, use_ctx
+from repro.train.step import TrainConfig, TrainState, init_train_state, make_train_step
+
+LM_ARCHS = [a for a in ARCHS if a != "ising-qmc"]
+
+# Per-(arch, shape) gradient-accumulation factors: memory levers recorded in
+# EXPERIMENTS.md §Dry-run (derived from memory_analysis iterations).
+GRAD_ACCUM: Dict[tuple, int] = {
+    ("qwen2.5-14b", "train_4k"): 4,
+    ("deepseek-coder-33b", "train_4k"): 8,
+    ("gemma-2b", "train_4k"): 4,
+    ("command-r-35b", "train_4k"): 8,
+    ("zamba2-1.2b", "train_4k"): 4,
+    ("rwkv6-1.6b", "train_4k"): 4,
+    ("deepseek-v3-671b", "train_4k"): 16,
+    ("llama4-scout-17b-a16e", "train_4k"): 8,
+    ("internvl2-26b", "train_4k"): 8,
+    ("whisper-tiny", "train_4k"): 4,
+}
+
+COLLECTIVE_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?[^=]*=\s*([a-z0-9]+)\[([0-9,]*)\]"
+)
+DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def collective_census(hlo_text: str) -> Dict[str, Any]:
+    """Census of collective ops in optimized HLO (per-device shapes).
+
+    Note: ops inside while-loop (scan) bodies appear ONCE here; the
+    scan-corrected totals come from the jaxpr analyzer.  This census is the
+    compile-time *evidence* that the expected collectives were emitted.
+    """
+    counts: Dict[str, int] = {}
+    bytes_: Dict[str, int] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        op, dt, dims = m.group(1), m.group(2), m.group(3)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * DTYPE_BYTES.get(dt, 4)
+        counts[op] = counts.get(op, 0) + 1
+        bytes_[op] = bytes_.get(op, 0) + b
+    return {"counts": counts, "bytes_once": bytes_}
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool, for_lowering=True,
+               cfg_overrides=None, tc_overrides=None):
+    """Returns (fn, example_args, in_shardings, donate, meta) for one cell.
+
+    ``cfg_overrides``/``tc_overrides`` support the §Perf hillclimb: e.g.
+    {"remat_policy": "dots"} or {"optimizer": AdamWConfig(state_dtype=...)}.
+    """
+    cfg = get_config(arch)
+    if cfg_overrides:
+        import dataclasses as _dc
+        moe_over = cfg_overrides.pop("_moe", None)
+        cfg = _dc.replace(cfg, **cfg_overrides)
+        if moe_over:
+            cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, **moe_over))
+    shape = SHAPES[shape_name]
+    mod = get_module(arch)
+    kind, inputs = mod.input_specs(shape)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.sharding.ctx import DEFAULT_RULES
+
+    rules = dict(DEFAULT_RULES)
+    if kind == "decode":
+        model_size = mesh.shape["model"]
+        if shape.global_batch == 1:
+            # long-context single request: shard the cache sequence over
+            # every available axis (batch unshardable).
+            rules["cache_seq"] = ("data", "model")
+        elif cfg.attn_kind == "mla" or cfg.num_kv_heads % model_size != 0:
+            # KV heads don't divide the model axis (qwen kv=8 on 16), or the
+            # cache is MLA's per-token latent: shard the cache's minor dim
+            # (head_dim / latent rank) over "model".  The one-token
+            # dynamic-update-slice stays shard-local (the updated seq dim is
+            # unsharded) and the QK^T contraction psums over "model".
+            rules["cache_head_dim"] = ("model",)
+    ctx = ShardingCtx(mesh, rules)
+
+    init_fn = encdec.init_params if cfg.encdec else decoder.init_params
+    params_p = jax.eval_shape(lambda k: init_fn(k, cfg), jax.random.PRNGKey(0))
+    values, logical = split_tree(params_p)
+    if kind != "train":
+        # Serving deployments run bf16 weights (halves HBM; matches compute dtype).
+        values = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            if s.dtype == jnp.float32
+            else s,
+            values,
+        )
+    with use_ctx(ctx):
+        p_shard = S.param_shardings(ctx, values, logical)
+
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": kind,
+        "mesh": dict(mesh.shape),
+        "multi_pod": multi_pod,
+        "params": int(cfg.num_params()),
+        "active_params": int(cfg.num_active_params()),
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+    }
+
+    if kind == "train":
+        accum = GRAD_ACCUM.get((arch, shape_name), 1)
+        # Each microbatch must still cover every batch shard.
+        batch_shards = int(
+            np.prod([mesh.shape[a] for a in ("pod", "data") if a in mesh.shape])
+        )
+        accum = max(1, min(accum, shape.global_batch // batch_shards))
+        tc_kw = dict(
+            optimizer=AdamWConfig(),
+            grad_accum=accum,
+            grad_compression="int8_ef" if multi_pod else "none",
+        )
+        if tc_overrides:
+            tc_kw.update(tc_overrides)
+        tc = TrainConfig(**tc_kw)
+        accum = tc.grad_accum
+        meta["grad_accum"] = accum
+        state_shapes = jax.eval_shape(lambda p: init_train_state(p, tc), values)
+        state_shardings = TrainState(
+            step=S.scalar_sharding(ctx),
+            params=p_shard,
+            opt=jax.tree_util.tree_map(lambda _: None, state_shapes.opt),
+            ef_residual=None,
+        )
+        # opt state mirrors params sharding
+        from repro.optim.adamw import OptState
+
+        state_shardings = state_shardings._replace(
+            opt=OptState(m=p_shard, v=p_shard),
+            ef_residual=(p_shard if tc.grad_compression != "none" else None),
+        )
+        with use_ctx(ctx):
+            b_shard = S.batch_shardings(ctx, inputs)
+        param_specs = jax.tree_util.tree_map(lambda s: s.spec, p_shard)
+        step = make_train_step(cfg, tc, param_specs=param_specs)
+        fn = step
+        args = (state_shapes, inputs)
+        shardings = (state_shardings, b_shard)
+        donate = (0,)
+    elif kind == "prefill":
+        with use_ctx(ctx):
+            b_shard = S.batch_shardings(ctx, inputs)
+
+        if cfg.encdec:
+
+            def fn(params, batch):
+                return encdec.apply(params, batch["tokens"], batch["frames"], cfg)
+
+        else:
+
+            def fn(params, batch):
+                return decoder.apply(
+                    params, batch["tokens"], cfg,
+                    visual_embeds=batch.get("visual_embeds"),
+                )
+
+        args = (values, inputs)
+        shardings = (p_shard, b_shard)
+        donate = ()
+    else:  # decode
+        with use_ctx(ctx):
+            c_shard = S.cache_shardings(ctx, inputs["caches"])
+            t_shard = S.batch_shardings(ctx, inputs["token"])
+        cfg_d = dataclasses.replace(cfg, max_target_length=shape.seq_len + 8)
+
+        if cfg.encdec:
+
+            def fn(params, token, caches, cur_len):
+                return encdec.decode_step(params, token, caches, cur_len, cfg_d)
+
+        else:
+
+            def fn(params, token, caches, cur_len):
+                return decoder.decode_step(params, token, caches, cur_len, cfg_d)
+
+        args = (values, inputs["token"], inputs["caches"], inputs["cur_len"])
+        shardings = (p_shard, t_shard, c_shard, S.scalar_sharding(ctx))
+        donate = (2,)
+    return fn, args, shardings, donate, meta, ctx
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, analyze: bool = True,
+             cfg_overrides=None, tc_overrides=None):
+    t0 = time.time()
+    try:
+        fn, args, shardings, donate, meta, ctx = build_cell(
+            arch, shape_name, multi_pod,
+            cfg_overrides=cfg_overrides, tc_overrides=tc_overrides)
+    except SkipCell as e:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": str(e)}
+    with use_ctx(ctx):
+        jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        census = collective_census(hlo)
+        row = dict(meta)
+        row.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+            },
+            xla_cost={
+                "flops_body_once": float(cost.get("flops", -1)),
+                "bytes_body_once": float(cost.get("bytes accessed", -1)),
+            },
+            collectives=census,
+        )
+        if analyze:
+            from benchmarks.hlo_analysis import analyze_fn
+
+            row["analysis"] = analyze_fn(fn, args, ctx.mesh)
+        return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-analyze", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = LM_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                print(f"=== {arch} x {shape} x {'2x16x16' if mp else '16x16'} ===", flush=True)
+                try:
+                    row = run_cell(arch, shape, mp, analyze=not args.no_analyze)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    row = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                print(json.dumps(row)[:2000], flush=True)
+                rows.append(row)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {len(rows)} rows to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

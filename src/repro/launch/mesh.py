@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module does not touch jax device state — the dry-run must set XLA_FLAGS
+before any device query, and smoke tests must keep seeing 1 device.
+
+Production target: TPU v5e pods, 16x16 = 256 chips per pod; the multi-pod
+mesh adds a leading "pod" axis (2 pods = 512 chips) over DCN.  Batch shards
+over ("pod", "data"); tensor/expert parallelism over "model"; the "pod"
+axis additionally carries the compressed gradient sync (train/step.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many (possibly forced) host devices exist."""
+    devs = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))
+
+
+def mesh_devices_required(multi_pod: bool) -> int:
+    return 512 if multi_pod else 256

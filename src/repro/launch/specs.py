@@ -1,0 +1,77 @@
+"""Sharding-spec resolution for every step-function argument.
+
+Params carry logical axes on their Param leaves (nn/param.py); batches and
+decode caches get logical axes assigned here by structural rules, then the
+active ``ShardingCtx`` maps logical -> physical with divisibility fallback.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding import ShardingCtx
+
+
+def param_shardings(ctx: ShardingCtx, values_tree, logical_tree):
+    return jax.tree_util.tree_map(
+        lambda v, lg: ctx.sharding(lg, v.shape), values_tree, logical_tree
+    )
+
+
+def batch_shardings(ctx: ShardingCtx, batch_tree):
+    def one(x):
+        if x.ndim == 0:
+            return NamedSharding(ctx.mesh, P())
+        logical = ("batch",) + (None,) * (x.ndim - 1)
+        return ctx.sharding(logical, x.shape)
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+_CACHE_RULES = {
+    # leaf name -> logical axes by ndim (leading "layers" axis always first)
+    "k": {5: ("layers", "batch", "cache_seq", "kv_heads", "cache_head_dim")},
+    "v": {5: ("layers", "batch", "cache_seq", "kv_heads", "cache_head_dim")},
+    "c_kv": {4: ("layers", "batch", "cache_seq", "cache_head_dim")},
+    "k_rope": {4: ("layers", "batch", "cache_seq", "cache_head_dim")},
+    "conv": {4: ("layers", "batch", None, "ssm_heads")},
+    "ssm": {5: ("layers", "batch", "ssm_heads", None, None)},
+    "tm_shift": {3: ("layers", "batch", None)},
+    "cm_shift": {3: ("layers", "batch", None)},
+    "wkv": {5: ("layers", "batch", "heads", None, None)},
+    "cross_k": {5: ("layers", "batch", None, "heads", None)},
+    "cross_v": {5: ("layers", "batch", None, "heads", None)},
+}
+
+
+def cache_shardings(ctx: ShardingCtx, caches_tree):
+    """Structural logical-axis assignment for decode cache pytrees."""
+
+    def one(path, x):
+        name = None
+        for entry in reversed(path):
+            if hasattr(entry, "name"):
+                name = entry.name
+                break
+        rules = _CACHE_RULES.get(name, {})
+        logical = rules.get(x.ndim)
+        if logical is None:
+            logical = ("layers", "batch") + (None,) * (x.ndim - 2)
+        return ctx.sharding(logical, x.shape)
+
+    return jax.tree_util.tree_map_with_path(one, caches_tree)
+
+
+def scalar_sharding(ctx: ShardingCtx):
+    return NamedSharding(ctx.mesh, P())
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(tree)
+    )

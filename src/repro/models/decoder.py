@@ -1,0 +1,599 @@
+"""Unified decoder-only model covering all assigned architecture families.
+
+One config-driven assembly handles: dense GQA transformers (qwen2.5,
+deepseek-coder, gemma, command-r, internvl backbone), MLA+MoE
+(deepseek-v3), GQA+MoE (llama4-scout), Mamba2 hybrid with a shared
+attention block (zamba2), and RWKV6 (attention-free).
+
+Homogeneous layer stacks are ``lax.scan``'d over stacked params (compact
+HLO at 62 layers, remat-friendly); heterogeneous patterns (zamba2's shared
+block, deepseek-v3's dense head layers) compose python-level around the
+scans.  Every forward mode is provided:
+
+  apply(params, tokens, ...)          -> logits (+ MoE aux loss)   [train]
+  prefill(params, tokens, ...)        -> logits, caches            [serve]
+  decode_step(params, token, caches)  -> logits, caches            [serve]
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.nn import attention as attn
+from repro.nn import mamba2 as mb
+from repro.nn import mla as mla_mod
+from repro.nn import moe as moe_mod
+from repro.nn import rwkv6 as rk
+from repro.nn.basic import (
+    embedding_init,
+    embedding_logits,
+    embedding_lookup,
+    layernorm_apply,
+    layernorm_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+)
+from repro.nn.param import Param, fan_in_init, is_param
+from repro.sharding import shard_constraint
+
+f32 = jnp.float32
+
+
+# --- small helpers --------------------------------------------------------------
+
+
+def _norm_init(cfg: ModelConfig, dim=None):
+    dim = dim or cfg.d_model
+    if cfg.norm_kind == "layernorm":
+        return layernorm_init(dim)
+    return rmsnorm_init(dim)
+
+
+def _norm_apply(cfg: ModelConfig, p, x):
+    if cfg.norm_kind == "layernorm":
+        return layernorm_apply(p, x)
+    return rmsnorm_apply(p, x, zero_centered=cfg.zero_centered_norm)
+
+
+def stack_layer_params(init_fn, key, n: int):
+    """vmap layer init over n keys -> stacked Params with 'layers' axis."""
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(init_fn)(keys)
+    return jax.tree_util.tree_map(
+        lambda p: Param(p.value, ("layers",) + p.logical), stacked, is_leaf=is_param
+    )
+
+
+# --- block definitions ------------------------------------------------------------
+
+
+def _attn_block_init(cfg: ModelConfig, key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": _norm_init(cfg), "norm2": _norm_init(cfg)}
+    if cfg.attn_kind == "mla":
+        s = cfg.mla
+        p["attn"] = mla_mod.mla_init(
+            k1,
+            cfg.d_model,
+            cfg.num_heads,
+            q_lora_rank=s.q_lora_rank,
+            kv_lora_rank=s.kv_lora_rank,
+            qk_nope_head_dim=s.qk_nope_head_dim,
+            qk_rope_head_dim=s.qk_rope_head_dim,
+            v_head_dim=s.v_head_dim,
+        )
+    else:
+        p["attn"] = attn.attention_init(
+            k1,
+            cfg.d_model,
+            cfg.num_heads,
+            cfg.num_kv_heads,
+            cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias,
+        )
+    return p
+
+
+def _dense_block_init(cfg: ModelConfig, key, d_ff=None):
+    p = _attn_block_init(cfg, key)
+    p["mlp"] = mlp_init(jax.random.split(key, 5)[4], cfg.d_model, d_ff or cfg.d_ff, cfg.mlp_kind)
+    return p
+
+
+def _moe_block_init(cfg: ModelConfig, key):
+    p = _attn_block_init(cfg, key)
+    p["moe"] = moe_mod.moe_init(jax.random.split(key, 5)[4], cfg.d_model, cfg.moe, cfg.mlp_kind)
+    return p
+
+
+def _attn_apply(cfg: ModelConfig, p, x, positions, dtype, return_kv=False):
+    if cfg.attn_kind == "mla":
+        s = cfg.mla
+        y, kv = mla_mod.mla_apply(
+            p,
+            x,
+            positions,
+            num_heads=cfg.num_heads,
+            kv_lora_rank=s.kv_lora_rank,
+            qk_rope_head_dim=s.qk_rope_head_dim,
+            rope_theta=cfg.rope_theta,
+            dtype=dtype,
+            q_chunk=cfg.q_chunk,
+            kv_chunk=cfg.kv_chunk,
+            skip_masked_chunks=cfg.skip_masked_chunks,
+        )
+    else:
+        y, kv = attn.attention_apply(
+            p,
+            x,
+            positions,
+            rope_theta=cfg.rope_theta,
+            dtype=dtype,
+            q_chunk=cfg.q_chunk,
+            kv_chunk=cfg.kv_chunk,
+            skip_masked_chunks=cfg.skip_masked_chunks,
+            softmax_exp=cfg.attn_exp,
+        )
+    if return_kv:
+        return y, kv
+    return y
+
+
+def _block_apply(cfg: ModelConfig, p, x, positions, *, use_moe: bool, dtype,
+                 return_kv: bool = False):
+    """One transformer block; returns (x, aux_loss[, kv])."""
+    aux = jnp.zeros((), f32)
+    h = _norm_apply(cfg, p["norm1"], x)
+    if return_kv:
+        attn_out, kv = _attn_apply(cfg, p["attn"], h, positions, dtype, return_kv=True)
+    else:
+        attn_out = _attn_apply(cfg, p["attn"], h, positions, dtype)
+    if cfg.parallel_block:  # command-r: one residual, parallel attn+ffn
+        ff_out = mlp_apply(p["mlp"], h, cfg.mlp_kind, dtype)
+        out = x + attn_out + ff_out
+        return (out, aux, kv) if return_kv else (out, aux)
+    x = x + attn_out
+    h = _norm_apply(cfg, p["norm2"], x)
+    if use_moe:
+        mo, aux = moe_mod.moe_apply(p["moe"], h, cfg.moe, mlp_kind=cfg.mlp_kind, dtype=dtype)
+        x = x + mo
+    else:
+        x = x + mlp_apply(p["mlp"], h, cfg.mlp_kind, dtype)
+    return (x, aux, kv) if return_kv else (x, aux)
+
+
+def _mamba_block_init(cfg: ModelConfig, key):
+    return {"norm": _norm_init(cfg), "mamba": mb.mamba2_init(key, cfg.mamba)}
+
+
+def _mamba_block_apply(cfg: ModelConfig, p, x, dtype):
+    return x + mb.mamba2_apply(p["mamba"], _norm_apply(cfg, p["norm"], x), cfg.mamba, dtype)
+
+
+def _rwkv_block_init(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layernorm_init(cfg.d_model),
+        "ln2": layernorm_init(cfg.d_model),
+        "tm": rk.rwkv6_time_mix_init(k1, cfg.rwkv),
+        "cm": rk.rwkv6_channel_mix_init(k2, cfg.rwkv),
+    }
+
+
+def _rwkv_block_apply(cfg: ModelConfig, p, x, dtype):
+    x = x + rk.rwkv6_time_mix_apply(p["tm"], layernorm_apply(p["ln1"], x), cfg.rwkv, dtype)
+    x = x + rk.rwkv6_channel_mix_apply(p["cm"], layernorm_apply(p["ln2"], x), dtype)
+    return x
+
+
+# --- model init -----------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embedding_init(ks[0], cfg.padded_vocab, cfg.d_model),
+        "final_norm": _norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = Param(
+            fan_in_init(ks[1], (cfg.d_model, cfg.padded_vocab), cfg.d_model),
+            ("embed", "vocab"),
+        )
+    L = cfg.num_layers
+    if cfg.rwkv is not None:
+        params["blocks"] = stack_layer_params(
+            lambda k: _rwkv_block_init(cfg, k), ks[2], L
+        )
+    elif cfg.mamba is not None:
+        params["blocks"] = stack_layer_params(
+            lambda k: _mamba_block_init(cfg, k), ks[2], L
+        )
+        if cfg.hybrid_attn_every:
+            params["shared_attn"] = _dense_block_init(cfg, ks[3])
+    elif cfg.moe is not None:
+        n_dense = cfg.moe_layer_start
+        if n_dense:
+            params["dense_blocks"] = stack_layer_params(
+                lambda k: _dense_block_init(cfg, k), ks[3], n_dense
+            )
+        params["blocks"] = stack_layer_params(
+            lambda k: _moe_block_init(cfg, k), ks[2], L - n_dense
+        )
+    else:
+        params["blocks"] = stack_layer_params(
+            lambda k: _dense_block_init(cfg, k), ks[2], L
+        )
+    return params
+
+
+# --- full-sequence forward ---------------------------------------------------------
+
+
+def _remat_wrap(cfg: ModelConfig, body):
+    if not cfg.remat:
+        return body
+    if cfg.remat_policy == "dots":
+        # Save matmul outputs: backward skips recomputing the heavy einsums
+        # (and the MoE dispatch) at the cost of storing them — the classic
+        # memory-traffic/VMEM trade (§Perf lever).
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(body)
+
+
+def _scan_blocks(cfg: ModelConfig, stacked, x, body):
+    """scan over stacked layer params accumulating aux loss."""
+    wrapped = _remat_wrap(cfg, body)
+
+    def f(carry, layer_params):
+        x, aux = carry
+        x, aux_l = wrapped(layer_params, x)
+        return (x, aux + aux_l), None
+
+    (x, aux), _ = lax.scan(f, (x, jnp.zeros((), f32)), stacked)
+    return x, aux
+
+
+def apply(
+    params,
+    tokens: jax.Array,  # (B, S_text)
+    cfg: ModelConfig,
+    *,
+    visual_embeds: Optional[jax.Array] = None,  # (B, P, d) for VLM
+) -> Tuple[jax.Array, jax.Array]:
+    """Full forward; returns (logits (B, S, vocab), aux_loss)."""
+    dtype = cfg.compute_dtype
+    x = embedding_lookup(params["embed"], tokens, dtype) * dtype(cfg.embed_multiplier)
+    if visual_embeds is not None:
+        x = jnp.concatenate([visual_embeds.astype(dtype), x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = shard_constraint(x, ("batch", "seq", None))
+    aux = jnp.zeros((), f32)
+
+    if cfg.rwkv is not None:
+        x, aux = _scan_blocks(
+            cfg, params["blocks"], x,
+            lambda p, h: (_rwkv_block_apply(cfg, p, h, dtype), jnp.zeros((), f32)),
+        )
+    elif cfg.mamba is not None:
+        if cfg.hybrid_attn_every:
+            # Python loop: shared attention block interleaves the scan-unfriendly
+            # pattern; mamba params indexed per layer.
+            every = cfg.hybrid_attn_every
+            for l in range(cfg.num_layers):
+                lp = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+                if l % every == 0:
+                    x, _ = _block_apply(
+                        cfg, params["shared_attn"], x, positions, use_moe=False, dtype=dtype
+                    )
+                x = _mamba_block_apply(cfg, lp, x, dtype)
+        else:
+            x, aux = _scan_blocks(
+                cfg, params["blocks"], x,
+                lambda p, h: (_mamba_block_apply(cfg, p, h, dtype), jnp.zeros((), f32)),
+            )
+    else:
+        if "dense_blocks" in params:
+            x, aux_d = _scan_blocks(
+                cfg, params["dense_blocks"], x,
+                lambda p, h: _block_apply(cfg, p, h, positions, use_moe=False, dtype=dtype),
+            )
+            aux = aux + aux_d
+        x, aux_m = _scan_blocks(
+            cfg, params["blocks"], x,
+            lambda p, h: _block_apply(
+                cfg, p, h, positions, use_moe=cfg.moe is not None, dtype=dtype
+            ),
+        )
+        aux = aux + aux_m
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = embedding_logits(params["embed"], x, dtype)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(dtype), params["lm_head"].astype(dtype))
+        logits = shard_constraint(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+# --- decode path --------------------------------------------------------------------
+
+
+class DecodeCaches(NamedTuple):
+    """Stacked per-layer caches; exact contents depend on the family."""
+
+    kv: Any  # attn.KVCache / mla.MLACache / mb.MambaCache / rk.RWKVCache (stacked)
+    shared_kv: Any  # zamba2 shared block caches (list) or None
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int) -> DecodeCaches:
+    dtype = cfg.compute_dtype
+    L = cfg.num_layers
+
+    def stack(make_one, n):
+        one = make_one()
+        return jax.tree_util.tree_map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+    if cfg.rwkv is not None:
+        return DecodeCaches(stack(lambda: rk.rwkv6_init_cache(batch, cfg.rwkv, dtype), L), None)
+    if cfg.mamba is not None:
+        kv = stack(lambda: mb.mamba2_init_cache(batch, cfg.mamba, dtype), L)
+        shared = None
+        if cfg.hybrid_attn_every:
+            n_sh = -(-L // cfg.hybrid_attn_every)
+            hd = cfg.resolved_head_dim
+            shared = stack(
+                lambda: attn.KVCache(
+                    k=jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+                    v=jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+                ),
+                n_sh,
+            )
+        return DecodeCaches(kv, shared)
+    if cfg.mla is not None:
+        s = cfg.mla
+        return DecodeCaches(
+            stack(
+                lambda: mla_mod.MLACache(
+                    c_kv=jnp.zeros((batch, max_len, s.kv_lora_rank), dtype),
+                    k_rope=jnp.zeros((batch, max_len, s.qk_rope_head_dim), dtype),
+                ),
+                L,
+            ),
+            None,
+        )
+    hd = cfg.resolved_head_dim
+    return DecodeCaches(
+        stack(
+            lambda: attn.KVCache(
+                k=jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+                v=jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+            ),
+            L,
+        ),
+        None,
+    )
+
+
+def _decode_attn(cfg: ModelConfig, p, x, cache, cur_len, dtype):
+    if cfg.attn_kind == "mla":
+        s = cfg.mla
+        return mla_mod.mla_decode_apply(
+            p, x, cache, cur_len,
+            num_heads=cfg.num_heads,
+            kv_lora_rank=s.kv_lora_rank,
+            qk_rope_head_dim=s.qk_rope_head_dim,
+            rope_theta=cfg.rope_theta,
+            dtype=dtype,
+        )
+    return attn.decode_attention_apply(
+        p, x, cache, cur_len, rope_theta=cfg.rope_theta, dtype=dtype
+    )
+
+
+def _decode_block(cfg: ModelConfig, p, x, cache, cur_len, *, use_moe: bool, dtype):
+    h = _norm_apply(cfg, p["norm1"], x)
+    a, new_cache = _decode_attn(cfg, p["attn"], h, cache, cur_len, dtype)
+    if cfg.parallel_block:
+        ff = mlp_apply(p["mlp"], h, cfg.mlp_kind, dtype)
+        return x + a + ff, new_cache
+    x = x + a
+    h = _norm_apply(cfg, p["norm2"], x)
+    if use_moe:
+        mo, _ = moe_mod.moe_apply(p["moe"], h, cfg.moe, mlp_kind=cfg.mlp_kind, dtype=dtype)
+        x = x + mo
+    else:
+        x = x + mlp_apply(p["mlp"], h, cfg.mlp_kind, dtype)
+    return x, new_cache
+
+
+def decode_step(
+    params,
+    token: jax.Array,  # (B, 1) int32
+    caches: DecodeCaches,
+    cur_len,  # scalar int32
+    cfg: ModelConfig,
+):
+    """One-token serve step; returns (logits (B, 1, vocab), new caches)."""
+    dtype = cfg.compute_dtype
+    x = embedding_lookup(params["embed"], token, dtype) * dtype(cfg.embed_multiplier)
+    x = shard_constraint(x, ("batch", None, None))
+
+    if cfg.rwkv is not None:
+
+        def f(h, inp):
+            lp, c = inp
+            h1 = layernorm_apply(lp["ln1"], h)
+            y, tm_shift, wkv = rk.rwkv6_time_mix_decode(lp["tm"], h1, c.tm_shift, c.wkv, cfg.rwkv, dtype)
+            h = h + y
+            h2 = layernorm_apply(lp["ln2"], h)
+            y2, cm_shift = rk.rwkv6_channel_mix_decode(lp["cm"], h2, c.cm_shift, dtype)
+            return h + y2, rk.RWKVCache(tm_shift, cm_shift, wkv)
+
+        x, new_kv = lax.scan(f, x, (params["blocks"], caches.kv))
+        new_caches = DecodeCaches(new_kv, None)
+    elif cfg.mamba is not None:
+        if cfg.hybrid_attn_every:
+            new_kv_list = []
+            new_shared = []
+            every = cfg.hybrid_attn_every
+            for l in range(cfg.num_layers):
+                lp = jax.tree_util.tree_map(lambda a: a[l], params["blocks"])
+                if l % every == 0:
+                    si = l // every
+                    sc = jax.tree_util.tree_map(lambda a: a[si], caches.shared_kv)
+                    x, nsc = _decode_block(
+                        cfg, params["shared_attn"], x, sc, cur_len, use_moe=False, dtype=dtype
+                    )
+                    new_shared.append(nsc)
+                c = jax.tree_util.tree_map(lambda a: a[l], caches.kv)
+                y, nc = mb.mamba2_decode_apply(
+                    lp["mamba"], _norm_apply(cfg, lp["norm"], x), c, cfg.mamba, dtype
+                )
+                x = x + y
+                new_kv_list.append(nc)
+            stack = lambda cs: jax.tree_util.tree_map(lambda *a: jnp.stack(a), *cs)
+            new_caches = DecodeCaches(stack(new_kv_list), stack(new_shared))
+        else:
+
+            def f(h, inp):
+                lp, c = inp
+                y, nc = mb.mamba2_decode_apply(
+                    lp["mamba"], _norm_apply(cfg, lp["norm"], h), c, cfg.mamba, dtype
+                )
+                return h + y, nc
+
+            x, new_kv = lax.scan(f, x, (params["blocks"], caches.kv))
+            new_caches = DecodeCaches(new_kv, None)
+    else:
+        n_dense = cfg.moe_layer_start if cfg.moe is not None else 0
+        if n_dense:
+            # dense head layers use the first n_dense cache entries
+            dense_caches = jax.tree_util.tree_map(lambda a: a[:n_dense], caches.kv)
+            moe_caches = jax.tree_util.tree_map(lambda a: a[n_dense:], caches.kv)
+
+            def fd(h, inp):
+                lp, c = inp
+                h, nc = _decode_block(cfg, lp, h, c, cur_len, use_moe=False, dtype=dtype)
+                return h, nc
+
+            x, new_dense = lax.scan(fd, x, (params["dense_blocks"], dense_caches))
+        else:
+            moe_caches = caches.kv
+
+        def f(h, inp):
+            lp, c = inp
+            h, nc = _decode_block(
+                cfg, lp, h, c, cur_len, use_moe=cfg.moe is not None, dtype=dtype
+            )
+            return h, nc
+
+        x, new_moe = lax.scan(f, x, (params["blocks"], moe_caches))
+        if n_dense:
+            new_kv = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), new_dense, new_moe
+            )
+        else:
+            new_kv = new_moe
+        new_caches = DecodeCaches(new_kv, None)
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = embedding_logits(params["embed"], x, dtype)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(dtype), params["lm_head"].astype(dtype))
+    return logits, new_caches
+
+
+# --- chunked prefill (serving) -----------------------------------------------------
+
+
+def prefill(
+    params,
+    tokens: jax.Array,  # (B, S_prompt)
+    cfg: ModelConfig,
+    max_len: int,
+):
+    """Full-prompt forward that FILLS the decode caches (attention-family
+    archs: GQA and MLA).  One chunked-attention pass captures every layer's
+    K/V (or MLA latents), padded to ``max_len`` — the production prefill
+    path (the serve engine's token-by-token prompt consumption is the
+    smoke-scale fallback; SSM archs prefill recurrently by construction).
+
+    Returns (logits (B, S_prompt, vocab), DecodeCaches, next_len).
+    """
+    if cfg.mamba is not None or cfg.rwkv is not None or cfg.encdec:
+        raise NotImplementedError("prefill(): attention-family archs only")
+    dtype = cfg.compute_dtype
+    B, S = tokens.shape
+    x = embedding_lookup(params["embed"], tokens, dtype) * dtype(cfg.embed_multiplier)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = shard_constraint(x, ("batch", "seq", None))
+    aux0 = jnp.zeros((), f32)
+
+    def body(lp, h, use_moe):
+        h, aux, kv = _block_apply(
+            cfg, lp, h, positions, use_moe=use_moe, dtype=dtype, return_kv=True
+        )
+        return h, aux, kv
+
+    def scan_fn(use_moe):
+        def f(carry, lp):
+            h, aux = carry
+            h, aux_l, kv = body(lp, h, use_moe)
+            return (h, aux + aux_l), kv
+
+        return f
+
+    kvs = []
+    if "dense_blocks" in params:
+        (x, aux0), kv_d = lax.scan(scan_fn(False), (x, aux0), params["dense_blocks"])
+        kvs.append(kv_d)
+    (x, aux0), kv_m = lax.scan(
+        scan_fn(cfg.moe is not None), (x, aux0), params["blocks"]
+    )
+    kvs.append(kv_m)
+    # Concatenate layer-stacked kv pytrees along the layer axis.
+    kv_all = jax.tree_util.tree_map(
+        lambda *a: jnp.concatenate(a, axis=0) if len(a) > 1 else a[0], *kvs
+    )
+
+    pad_to = max_len - S
+    if cfg.attn_kind == "mla":
+        c_kv, k_rope = kv_all  # (L,B,S,rank), (L,B,S,1,dr)
+        k_rope = k_rope[:, :, :, 0, :]
+        caches = DecodeCaches(
+            mla_mod.MLACache(
+                c_kv=jnp.pad(c_kv.astype(dtype), ((0, 0), (0, 0), (0, pad_to), (0, 0))),
+                k_rope=jnp.pad(k_rope.astype(dtype), ((0, 0), (0, 0), (0, pad_to), (0, 0))),
+            ),
+            None,
+        )
+    else:
+        k, v = kv_all  # (L,B,S,K,D)
+        caches = DecodeCaches(
+            attn.KVCache(
+                k=jnp.pad(k.astype(dtype), ((0, 0), (0, 0), (0, pad_to), (0, 0), (0, 0))),
+                v=jnp.pad(v.astype(dtype), ((0, 0), (0, 0), (0, pad_to), (0, 0), (0, 0))),
+            ),
+            None,
+        )
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = embedding_logits(params["embed"], x, dtype)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(dtype), params["lm_head"].astype(dtype))
+    return logits, caches, jnp.int32(S)

@@ -1,0 +1,148 @@
+"""Basic layers: linear, norms, embeddings, rotary position embedding.
+
+All layers are (init, apply) function pairs over Param trees.  Compute dtype
+is caller-controlled (bf16 in production configs); params stay float32 and
+norms always accumulate in float32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.param import Param, fan_in_init
+from repro.sharding import shard_constraint
+
+f32 = jnp.float32
+
+
+# --- linear -------------------------------------------------------------------
+
+
+def linear_init(
+    key,
+    in_dim: int,
+    out_dim: int,
+    *,
+    logical: Tuple[Optional[str], Optional[str]],
+    bias: bool = False,
+    bias_logical: Tuple[Optional[str], ...] | None = None,
+):
+    p = {"kernel": Param(fan_in_init(key, (in_dim, out_dim), in_dim), logical)}
+    if bias:
+        p["bias"] = Param(
+            jnp.zeros((out_dim,), f32), bias_logical or (logical[1],)
+        )
+    return p
+
+
+def linear_apply(p, x, dtype=jnp.bfloat16):
+    y = jnp.einsum("...i,io->...o", x.astype(dtype), p["kernel"].astype(dtype))
+    if "bias" in p:
+        y = y + p["bias"].astype(dtype)
+    return y
+
+
+# --- norms ---------------------------------------------------------------------
+
+
+def rmsnorm_init(dim: int, logical=("embed",)):
+    return {"scale": Param(jnp.ones((dim,), f32), logical)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6, zero_centered: bool = False):
+    xf = x.astype(f32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(f32)
+    if zero_centered:  # gemma-style (1 + scale)
+        scale = 1.0 + scale
+    return (y * scale).astype(x.dtype)
+
+
+def layernorm_init(dim: int, logical=("embed",)):
+    return {
+        "scale": Param(jnp.ones((dim,), f32), logical),
+        "bias": Param(jnp.zeros((dim,), f32), logical),
+    }
+
+
+def layernorm_apply(p, x, eps: float = 1e-5):
+    xf = x.astype(f32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(f32) + p["bias"].astype(f32)).astype(x.dtype)
+
+
+# --- embedding ------------------------------------------------------------------
+
+
+def embedding_init(key, vocab: int, dim: int, scale_by_dim: bool = False):
+    std = 1.0 if scale_by_dim else 0.02
+    return {"table": Param(fan_in_init(key, (vocab, dim), int(1 / (std**2))), ("vocab", "embed"))}
+
+
+def embedding_lookup(p, tokens, dtype=jnp.bfloat16):
+    out = jnp.take(p["table"].astype(dtype), tokens, axis=0)
+    return shard_constraint(out, ("batch", "seq", None))
+
+
+def embedding_logits(p, x, dtype=jnp.bfloat16):
+    """Tied decode head: (..., embed) @ (embed, vocab)."""
+    logits = jnp.einsum("...d,vd->...v", x.astype(dtype), p["table"].astype(dtype))
+    return shard_constraint(logits, ("batch", "seq", "vocab"))
+
+
+# --- rotary ----------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 1e4) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta), f32)
+    angles = positions[..., :, None].astype(f32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(f32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- gated MLP --------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": Param(fan_in_init(k1, (d_model, d_ff), d_model), ("embed", "mlp")),
+        "wo": Param(fan_in_init(k3, (d_ff, d_model), d_ff), ("mlp", "embed")),
+    }
+    if kind in ("swiglu", "geglu"):
+        p["wg"] = Param(fan_in_init(k2, (d_model, d_ff), d_model), ("embed", "mlp"))
+    return p
+
+
+def mlp_apply(p, x, kind: str = "swiglu", dtype=jnp.bfloat16):
+    h = jnp.einsum("...d,df->...f", x.astype(dtype), p["wi"].astype(dtype))
+    if kind == "swiglu":
+        g = jnp.einsum("...d,df->...f", x.astype(dtype), p["wg"].astype(dtype))
+        h = jax.nn.silu(g) * h
+    elif kind == "geglu":
+        g = jnp.einsum("...d,df->...f", x.astype(dtype), p["wg"].astype(dtype))
+        h = jax.nn.gelu(g, approximate=True) * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    elif kind == "relu_sq":  # rwkv channel-mix style
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(kind)
+    h = shard_constraint(h, ("batch", "seq", "mlp"))
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dtype))

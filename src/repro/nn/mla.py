@@ -1,0 +1,165 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3) — arXiv:2412.19437 §2.1.
+
+Queries and KV are factored through low-rank latents.  Training/prefill
+up-projects per-head K/V and runs standard chunked attention.  Decode uses
+the *absorbed* formulation: only the compressed latent ``c_kv`` (512) plus
+the shared rope key (64) are cached — 576 floats/token regardless of the
+128 heads — and the K/V up-projections are folded into the query/output
+sides.  This is MLA's entire point and is what makes the decode_32k /
+long-context cells cheap on HBM.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import NEG_INF, chunked_attention
+from repro.nn.basic import apply_rope, rmsnorm_apply, rmsnorm_init
+from repro.nn.param import Param, fan_in_init
+from repro.sharding import shard_constraint
+
+f32 = jnp.float32
+
+
+def mla_init(
+    key,
+    d_model: int,
+    num_heads: int,
+    *,
+    q_lora_rank: int = 1536,
+    kv_lora_rank: int = 512,
+    qk_nope_head_dim: int = 128,
+    qk_rope_head_dim: int = 64,
+    v_head_dim: int = 128,
+):
+    ks = jax.random.split(key, 8)
+    dn, dr, dv = qk_nope_head_dim, qk_rope_head_dim, v_head_dim
+    return {
+        "wq_a": Param(fan_in_init(ks[0], (d_model, q_lora_rank), d_model), ("embed", None)),
+        "q_norm": rmsnorm_init(q_lora_rank, ("lora",)),
+        "wq_b": Param(
+            fan_in_init(ks[1], (q_lora_rank, num_heads, dn + dr), q_lora_rank),
+            ("lora", "heads", None),
+        ),
+        "wkv_a": Param(
+            fan_in_init(ks[2], (d_model, kv_lora_rank + dr), d_model), ("embed", None)
+        ),
+        "kv_norm": rmsnorm_init(kv_lora_rank, ("lora",)),
+        "wk_b": Param(
+            fan_in_init(ks[3], (kv_lora_rank, num_heads, dn), kv_lora_rank),
+            ("lora", "heads", None),
+        ),
+        "wv_b": Param(
+            fan_in_init(ks[4], (kv_lora_rank, num_heads, dv), kv_lora_rank),
+            ("lora", "heads", None),
+        ),
+        "wo": Param(
+            fan_in_init(ks[5], (num_heads, dv, d_model), num_heads * dv),
+            ("heads", "head_dim", "embed"),
+        ),
+    }
+
+
+def _latents(p, x, positions, rope_theta, dtype, kv_lora_rank, dr):
+    """Shared q/kv latent computation. Returns (q_nope, q_rope, c_kv, k_rope)."""
+    cq = jnp.einsum("bsd,dr->bsr", x.astype(dtype), p["wq_a"].astype(dtype))
+    cq = rmsnorm_apply(p["q_norm"], cq)
+    q = jnp.einsum("bsr,rhk->bshk", cq.astype(dtype), p["wq_b"].astype(dtype))
+    q_nope, q_rope = q[..., :-dr], q[..., -dr:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x.astype(dtype), p["wkv_a"].astype(dtype))
+    c_kv = rmsnorm_apply(p["kv_norm"], ckv_full[..., :kv_lora_rank])
+    k_rope = ckv_full[..., kv_lora_rank:][:, :, None, :]  # (B,S,1,dr) shared head
+    k_rope = apply_rope(k_rope, positions, rope_theta)
+    c_kv = shard_constraint(c_kv, ("batch", "seq", None))
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(
+    p,
+    x,
+    positions,
+    *,
+    num_heads: int,
+    kv_lora_rank: int = 512,
+    qk_rope_head_dim: int = 64,
+    rope_theta: float = 1e4,
+    dtype=jnp.bfloat16,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    skip_masked_chunks: bool = False,
+):
+    """Full-sequence MLA (training / prefill): up-project K/V per head."""
+    dr = qk_rope_head_dim
+    q_nope, q_rope, c_kv, k_rope = _latents(
+        p, x, positions, rope_theta, dtype, kv_lora_rank, dr
+    )
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv.astype(dtype), p["wk_b"].astype(dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv.astype(dtype), p["wv_b"].astype(dtype))
+    H = num_heads
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (dr,))], axis=-1)
+    # v head dim may differ from qk head dim; pad for the shared kernel then slice.
+    dv = v.shape[-1]
+    dq = q.shape[-1]
+    if dv < dq:
+        v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dq - dv)))
+    else:
+        v_p = v
+    out = chunked_attention(
+        q, k, v_p, causal=True, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        skip_masked_chunks=skip_masked_chunks,
+    )[..., :dv]
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return shard_constraint(y, ("batch", "seq", None)), (c_kv, k_rope)
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array  # (B, S_max, kv_lora_rank)
+    k_rope: jax.Array  # (B, S_max, dr)
+
+
+def mla_decode_apply(
+    p,
+    x,  # (B, 1, d)
+    cache: MLACache,
+    cur_len,
+    *,
+    num_heads: int,
+    kv_lora_rank: int = 512,
+    qk_rope_head_dim: int = 64,
+    rope_theta: float = 1e4,
+    dtype=jnp.bfloat16,
+):
+    """Absorbed-matmul decode: attention runs in the 512-dim latent space."""
+    B = x.shape[0]
+    dr = qk_rope_head_dim
+    positions = jnp.full((B, 1), cur_len, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _latents(
+        p, x, positions, rope_theta, dtype, kv_lora_rank, dr
+    )
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), cur_len, axis=1
+    )
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, kr_new[:, :, 0, :].astype(cache.k_rope.dtype), cur_len, axis=1
+    )
+    # Absorb wk_b into the query: q_eff (B,1,H,rank).
+    q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(dtype))
+    s = jnp.einsum("bshr,btr->bhst", q_eff, c_kv.astype(dtype)).astype(f32)
+    s = s + jnp.einsum("bshk,btk->bhst", q_rope, k_rope.astype(dtype)).astype(f32)
+    dn = p["wk_b"].shape[2]
+    s = s / math.sqrt(dn + dr)
+    valid = jnp.arange(c_kv.shape[1])[None, None, None, :] <= cur_len
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    # Attention output in latent space, then absorb wv_b.
+    o_lat = jnp.einsum("bhst,btr->bshr", w.astype(dtype), c_kv.astype(dtype))
+    out = jnp.einsum("bshr,rhk->bshk", o_lat, p["wv_b"].astype(dtype))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return shard_constraint(y, ("batch", None, None)), MLACache(c_kv, k_rope)

@@ -1,0 +1,58 @@
+"""Param leaves carrying logical sharding axes (hand-rolled, no flax).
+
+``Param`` is a pytree node whose child is the value (array or
+ShapeDtypeStruct) and whose aux data is the tuple of logical axis names.
+Init functions build trees of Params; ``split_tree`` separates the value
+tree (what the model consumes) from the logical-axes tree (what the
+launcher turns into NamedShardings).  Because logical axes live in aux
+data, ``jax.eval_shape`` over an init function preserves them — this is
+what lets the dry-run construct fully-sharded abstract params without ever
+allocating a byte.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+class Param:
+    """A model parameter annotated with logical axis names."""
+
+    def __init__(self, value: Any, logical: Tuple[str, ...]):
+        self.value = value
+        self.logical = tuple(logical)
+
+    def tree_flatten(self):
+        return (self.value,), self.logical
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Param(shape={shape}, logical={self.logical})"
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_tree(tree):
+    """(params_with_Param_leaves) -> (values_tree, logical_axes_tree)."""
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_param)
+    logical = jax.tree_util.tree_map(lambda p: p.logical, tree, is_leaf=is_param)
+    return values, logical
+
+
+def normal_init(key, shape, std, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def fan_in_init(key, shape, fan_in, dtype=jnp.float32):
+    return normal_init(key, shape, 1.0 / np.sqrt(max(fan_in, 1)), dtype)

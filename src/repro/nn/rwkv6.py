@@ -1,0 +1,229 @@
+"""RWKV-6 "Finch" block — arXiv:2404.05892 (data-dependent decay linear attn).
+
+Time mixing uses data-dependent token-shift (DDLerp LoRA) and a
+data-dependent per-channel decay ``w_t = exp(-exp(...))``; the WKV state is
+a per-head (N x P) matrix updated multiplicatively — attention-free, O(1)
+state per token, so decode cost is independent of context length (the
+long_500k cell runs the recurrent path).
+
+Training uses a chunked formulation: within a chunk all decay products are
+expressed relative to chunk boundaries with non-positive exponents wherever
+the tensors are large (bounded <= 1), and the per-step log-decay is clamped
+to [-CLAMP, -eps] so the one positive-exponent factor (k * exp(cs_start -
+cs_j), at most e^{CLAMP*chunk}) stays far inside float32 range for
+chunk=16..32.
+
+Channel mixing is the squared-ReLU receptance-gated FFN of the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.basic import layernorm_apply, layernorm_init
+from repro.nn.param import Param, fan_in_init
+from repro.sharding import shard_constraint
+
+f32 = jnp.float32
+LOGW_CLAMP = 4.0  # |log decay| per step; exp(4*16) ~ 6e27 << f32 max
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    lora_mix: int = 32
+    lora_decay: int = 64
+    chunk: int = 16
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def rwkv6_time_mix_init(key, cfg: RWKV6Config):
+    ks = jax.random.split(key, 12)
+    d, H, N = cfg.d_model, cfg.num_heads, cfg.head_dim
+    p = {
+        "maa_x": Param(jnp.zeros((d,), f32), (None,)),
+        "maa_base": Param(jnp.zeros((len(MIX_NAMES), d), f32), (None, None)),
+        "maa_w1": Param(
+            fan_in_init(ks[0], (d, len(MIX_NAMES) * cfg.lora_mix), d), (None, None)
+        ),
+        "maa_w2": Param(
+            fan_in_init(ks[1], (len(MIX_NAMES), cfg.lora_mix, d), cfg.lora_mix),
+            (None, None, None),
+        ),
+        "decay_base": Param(jnp.full((d,), -2.0, f32), (None,)),
+        "decay_w1": Param(fan_in_init(ks[2], (d, cfg.lora_decay), d), (None, None)),
+        "decay_w2": Param(
+            fan_in_init(ks[3], (cfg.lora_decay, d), cfg.lora_decay), (None, None)
+        ),
+        "bonus_u": Param(jnp.zeros((H, N), f32), ("heads", None)),
+        "wr": Param(fan_in_init(ks[4], (d, d), d), ("embed", "qkv")),
+        "wk": Param(fan_in_init(ks[5], (d, d), d), ("embed", "qkv")),
+        "wv": Param(fan_in_init(ks[6], (d, d), d), ("embed", "qkv")),
+        "wg": Param(fan_in_init(ks[7], (d, d), d), ("embed", "qkv")),
+        "wo": Param(fan_in_init(ks[8], (d, d), d), ("qkv", "embed")),
+        "ln_x": layernorm_init(d, (None,)),
+    }
+    return p
+
+
+def _ddlerp(p, x, x_shift):
+    """Data-dependent token-shift mixing (Finch's DDLerp)."""
+    xx = x_shift - x
+    xxx = x + xx * p["maa_x"].astype(x.dtype)
+    lora = jnp.tanh(
+        jnp.einsum("bsd,dm->bsm", xxx, p["maa_w1"].astype(x.dtype))
+    )
+    lora = lora.reshape(lora.shape[:2] + (len(MIX_NAMES), -1))
+    deltas = jnp.einsum("bscm,cmd->bscd", lora, p["maa_w2"].astype(x.dtype))
+    mixed = []
+    for c, _ in enumerate(MIX_NAMES):
+        m = p["maa_base"].astype(x.dtype)[c] + deltas[:, :, c]
+        mixed.append(x + xx * m)
+    return mixed  # [xw, xk, xv, xr, xg]
+
+
+def _decay_log(p, xw):
+    """Per-channel log decay in [-LOGW_CLAMP, -1e-6]."""
+    dd = jnp.tanh(jnp.einsum("bsd,dm->bsm", xw.astype(f32), p["decay_w1"].astype(f32)))
+    raw = p["decay_base"].astype(f32) + jnp.einsum(
+        "bsm,md->bsd", dd, p["decay_w2"].astype(f32)
+    )
+    return -jnp.clip(jnp.exp(raw), 1e-6, LOGW_CLAMP)
+
+
+def _wkv_chunked(r, k, v, logw, u, chunk):
+    """Chunked WKV: r,k,v (b,s,h,n|p), logw (b,s,h,n), u (h,n)."""
+    b, s, h, n = k.shape
+    pdim = v.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+    rs = lambda t: t.reshape((b, nc, q) + t.shape[2:])
+    r, k, v, logw = rs(r), rs(k), rs(v), rs(logw)
+    cs = jnp.cumsum(logw, axis=2)  # (b,nc,q,h,n), decreasing
+    total = cs[:, :, -1]  # (b,nc,h,n)
+
+    # Intra-chunk, strict lower triangle: factor exp(cs_{i-1} - cs_j), j < i.
+    r_dec = r * jnp.exp(cs - logw)  # r_i * exp(cs_{i-1}) relative to chunk start
+    k_grow = k * jnp.exp(-cs)  # k_j * exp(-cs_j); bounded by clamp
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", r_dec, k_grow)
+    mask = (jnp.arange(q)[:, None] > jnp.arange(q)[None, :])[None, None, :, :, None]
+    scores = jnp.where(mask, scores, 0.0)
+    y = jnp.einsum("bcijh,bcjhp->bcihp", scores, v)
+    # Diagonal bonus term: r_i . (u * k_i) v_i.
+    diag = jnp.einsum("bcqhn,bcqhn->bcqh", r * u[None, None, None, :, :], k)
+    y = y + diag[..., None] * v
+
+    # Chunk-final states: S_c = sum_j exp(total - cs_j) k_j (x) v_j (exponent <= 0).
+    S_c = jnp.einsum("bcqhn,bcqhp->bchnp", k * jnp.exp(total[:, :, None] - cs), v)
+
+    def step(S_prev, inp):
+        S_c_i, tot_i = inp
+        return S_prev * jnp.exp(tot_i)[..., None] + S_c_i, S_prev
+
+    S0 = jnp.zeros((b, h, n, pdim), f32)
+    _, S_prevs = jax.lax.scan(
+        step, S0, (S_c.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2, 3))
+    )
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)  # (b,nc,h,n,p)
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", r_dec, S_prevs)
+    return (y + y_inter).reshape(b, s, h, pdim)
+
+
+def rwkv6_time_mix_apply(p, x, cfg: RWKV6Config, dtype=jnp.bfloat16, shift_state=None):
+    """Full-sequence time mixing. x: (B,S,d)."""
+    B, S, d = x.shape
+    H, N = cfg.num_heads, cfg.head_dim
+    prev = jnp.zeros_like(x[:, :1]) if shift_state is None else shift_state[:, None, :]
+    x_shift = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _ddlerp(p, x.astype(dtype), x_shift.astype(dtype))
+    logw = _decay_log(p, xw).reshape(B, S, H, N)
+    r = jnp.einsum("bsd,do->bso", xr, p["wr"].astype(dtype)).reshape(B, S, H, N).astype(f32)
+    k = jnp.einsum("bsd,do->bso", xk, p["wk"].astype(dtype)).reshape(B, S, H, N).astype(f32)
+    v = jnp.einsum("bsd,do->bso", xv, p["wv"].astype(dtype)).reshape(B, S, H, N).astype(f32)
+    g = jax.nn.silu(jnp.einsum("bsd,do->bso", xg, p["wg"].astype(dtype)))
+    y = _wkv_chunked(r, k, v, logw, p["bonus_u"].astype(f32), cfg.chunk)
+    y = y.reshape(B, S, d)
+    y = layernorm_apply(p["ln_x"], y.astype(dtype))
+    y = shard_constraint(y, ("batch", "seq", None))
+    out = jnp.einsum("bsd,do->bso", y * g, p["wo"].astype(dtype))
+    return out
+
+
+class RWKVCache(NamedTuple):
+    tm_shift: jax.Array  # (B, d) last input of time mix
+    cm_shift: jax.Array  # (B, d) last input of channel mix
+    wkv: jax.Array  # (B, H, N, P) f32
+
+
+def rwkv6_init_cache(batch, cfg: RWKV6Config, dtype=jnp.bfloat16) -> RWKVCache:
+    H, N = cfg.num_heads, cfg.head_dim
+    return RWKVCache(
+        tm_shift=jnp.zeros((batch, cfg.d_model), dtype),
+        cm_shift=jnp.zeros((batch, cfg.d_model), dtype),
+        wkv=jnp.zeros((batch, H, N, N), f32),
+    )
+
+
+def rwkv6_time_mix_decode(p, x, cache_tm, wkv, cfg: RWKV6Config, dtype=jnp.bfloat16):
+    """One recurrent step. x: (B,1,d); returns (y, new_tm_shift, new_wkv)."""
+    B, _, d = x.shape
+    H, N = cfg.num_heads, cfg.head_dim
+    x_shift = cache_tm[:, None, :].astype(dtype)
+    xw, xk, xv, xr, xg = _ddlerp(p, x.astype(dtype), x_shift)
+    logw = _decay_log(p, xw).reshape(B, H, N)
+    r = jnp.einsum("bsd,do->bso", xr, p["wr"].astype(dtype)).reshape(B, H, N).astype(f32)
+    k = jnp.einsum("bsd,do->bso", xk, p["wk"].astype(dtype)).reshape(B, H, N).astype(f32)
+    v = jnp.einsum("bsd,do->bso", xv, p["wv"].astype(dtype)).reshape(B, H, N).astype(f32)
+    g = jax.nn.silu(jnp.einsum("bsd,do->bso", xg, p["wg"].astype(dtype)))[:, 0]
+    u = p["bonus_u"].astype(f32)
+    # y = r . (S + u*k (x) v);  S' = diag(exp(logw)) S + k (x) v.
+    kv = jnp.einsum("bhn,bhp->bhnp", k, v)
+    y = jnp.einsum("bhn,bhnp->bhp", r, wkv + u[None, :, :, None] * kv)
+    new_wkv = jnp.exp(logw)[..., None] * wkv + kv
+    y = y.reshape(B, d)
+    y = layernorm_apply(p["ln_x"], y.astype(dtype))
+    out = jnp.einsum("bd,do->bo", y * g, p["wo"].astype(dtype))
+    return out[:, None, :], x[:, 0], new_wkv
+
+
+def rwkv6_channel_mix_init(key, cfg: RWKV6Config):
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "maa_k": Param(jnp.full((d,), 0.5, f32), (None,)),
+        "maa_r": Param(jnp.full((d,), 0.5, f32), (None,)),
+        "wk": Param(fan_in_init(ks[0], (d, f), d), ("embed", "mlp")),
+        "wv": Param(fan_in_init(ks[1], (f, d), f), ("mlp", "embed")),
+        "wr": Param(fan_in_init(ks[2], (d, d), d), ("embed", None)),
+    }
+
+
+def rwkv6_channel_mix_apply(p, x, dtype=jnp.bfloat16, shift_state=None):
+    prev = jnp.zeros_like(x[:, :1]) if shift_state is None else shift_state[:, None, :]
+    x_shift = jnp.concatenate([prev, x[:, :-1]], axis=1).astype(dtype)
+    xd = x.astype(dtype)
+    xx = x_shift - xd
+    xk = xd + xx * p["maa_k"].astype(dtype)
+    xr = xd + xx * p["maa_r"].astype(dtype)
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,do->bso", xr, p["wr"].astype(dtype)))
+    h = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dtype))))
+    h = shard_constraint(h, ("batch", "seq", "mlp"))
+    return rgate * jnp.einsum("bsf,fd->bsd", h, p["wv"].astype(dtype))
+
+
+def rwkv6_channel_mix_decode(p, x, cache_cm, dtype=jnp.bfloat16):
+    y = rwkv6_channel_mix_apply(p, x, dtype, shift_state=cache_cm.astype(x.dtype))
+    return y, x[:, 0]

@@ -1,0 +1,89 @@
+"""AdamW with decoupled weight decay, global-norm clipping and schedules.
+
+Hand-rolled (no optax dependency): state is a pytree mirror of params
+(m, v), sharded identically to the parameters so optimizer memory
+distributes with the model (ZeRO-1 comes free from SPMD here: each device
+only holds the optimizer shard for the params it owns).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: str = "float32"  # "bfloat16" halves optimizer HBM (m, v)
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+
+
+def init_opt_state(params, state_dtype=f32) -> OptState:
+    z = lambda p: jnp.zeros_like(p, dtype=state_dtype)
+    return OptState(jax.tree_util.tree_map(z, params), jax.tree_util.tree_map(z, params))
+
+
+def lr_schedule(cfg: AdamWConfig, step) -> jax.Array:
+    step = step.astype(f32)
+    if cfg.warmup_steps > 0:
+        warm = jnp.minimum(step / cfg.warmup_steps, 1.0)
+    else:
+        warm = jnp.float32(1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(f32))) for l in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, opt: OptState, step):
+    """Returns (new_params, new_opt, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1, b2 = f32(cfg.b1), f32(cfg.b2)
+    step1 = (step + 1).astype(f32)
+    bc1 = 1 - b1**step1
+    bc2 = 1 - b2**step1
+
+    sdt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else f32
+
+    def upd(p, g, m, v):
+        g = g.astype(f32) * scale
+        m_new = b1 * m.astype(f32) + (1 - b1) * g
+        v_new = b2 * v.astype(f32) + (1 - b2) * jnp.square(g)
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(f32)
+        return (p.astype(f32) - lr * delta).astype(p.dtype), m_new.astype(sdt), v_new.astype(sdt)
+
+    flat = jax.tree_util.tree_map(upd, params, grads, opt.m, opt.v)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(new_m, new_v), {"grad_norm": gnorm, "lr": lr}

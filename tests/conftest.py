@@ -1,0 +1,9 @@
+"""Test config: single-device CPU (the dry-run forces 512 devices in its own
+subprocess only — never here), fast hypothesis profile for the 1-core CI."""
+
+import hypothesis
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=15, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("ci")

@@ -1,0 +1,48 @@
+"""Integration: the multi-pod dry-run driver compiles a real cell in a
+subprocess (the 512-device XLA_FLAGS must never leak into this test
+process) and emits the JSON row with memory/cost/collective evidence."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [("qwen2.5-14b", "decode_32k")])
+def test_dryrun_cell_subprocess(arch, shape):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, "--no-analyze"],
+        capture_output=True, text=True, timeout=420, env=env, cwd=REPO,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    row = None
+    for line in proc.stdout.splitlines():
+        if line.startswith("{"):
+            row = json.loads(line)
+    assert row is not None, proc.stdout[-2000:]
+    assert row["status"] == "ok", row
+    assert row["memory"]["temp_bytes"] > 0
+    assert row["mesh"] == {"data": 16, "model": 16}
+    # Sharded decode must have emitted collectives (psum over model for the
+    # head_dim-sharded QK contraction at minimum).
+    assert sum(row["collectives"]["counts"].values()) > 0
+
+
+def test_dryrun_skip_cell_reason():
+    """Skips are structured, not silent."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen2.5-14b", "--shape", "long_500k", "--no-analyze"],
+        capture_output=True, text=True, timeout=120, env=env, cwd=REPO,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    row = json.loads([l for l in proc.stdout.splitlines() if l.startswith("{")][-1])
+    assert row["status"] == "skipped"
+    assert "sub-quadratic" in row["reason"]

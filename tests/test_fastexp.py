@@ -1,0 +1,66 @@
+"""fastexp: paper §2.4 error envelopes + Pallas kernel vs oracle."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from repro.core import fastexp as fx
+from repro.kernels import ops, ref
+
+
+def rel_err(approx, x):
+    return np.abs(np.asarray(approx, np.float64) / np.exp(np.asarray(x, np.float64)) - 1)
+
+
+def test_fast_error_envelope():
+    # Paper: linear interpolation scaled by 2 ln^2 2 -> err in (-3.92%, +2.0%).
+    x = jnp.linspace(fx.ACCURATE_LO, fx.ACCURATE_HI - 0.01, 200_001)
+    r = np.asarray(fx.fastexp_fast(x), np.float64) / np.exp(np.asarray(x, np.float64)) - 1
+    assert r.max() <= 0.0201, r.max()
+    assert r.min() >= -0.0392, r.min()
+    # Mean relative error centred near zero (the 2 ln^2 2 scaling's purpose).
+    assert abs(r.mean()) < 2e-3
+
+
+def test_accurate_error_envelope():
+    # Paper: roughly (-0.01, +0.005).
+    x = jnp.linspace(fx.ACCURATE_LO + 0.01, fx.ACCURATE_HI - 0.01, 200_001)
+    r = np.asarray(fx.fastexp_accurate(x), np.float64) / np.exp(np.asarray(x, np.float64)) - 1
+    assert r.max() <= 0.0051, r.max()
+    assert r.min() >= -0.0105, r.min()
+
+
+def test_accurate_masking():
+    # 0.0 below -31.5 ln 2; >= 1.0 for x > 0 (Metropolis always-accept).
+    x = jnp.asarray([fx.ACCURATE_LO - 1.0, -50.0, 0.5, 1e-3, 10.0])
+    y = np.asarray(fx.fastexp_accurate(x))
+    assert y[0] == 0.0 and y[1] == 0.0
+    assert (y[2:] >= 1.0 - 1e-7).all()
+
+
+@given(st.integers(0, 2**32 - 1))
+def test_fast_matches_interpolant_property(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-20, 20, size=64).astype(np.float32))
+    r = rel_err(fx.fastexp_fast(x), x)
+    assert r.max() < 0.04
+
+
+@pytest.mark.parametrize("flavor", ["fast", "accurate"])
+@pytest.mark.parametrize("shape", [(7,), (128,), (1000,), (3, 5, 11), (256, 128)])
+def test_kernel_matches_ref(flavor, shape):
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.uniform(-20, 20, size=shape).astype(np.float32))
+    got = ops.fastexp(x, flavor)
+    want = ref.fastexp_ref(x, flavor)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_kernel_dtype_sweep(dtype):
+    x = jnp.linspace(-5, 5, 384).astype(dtype)
+    got = np.asarray(ops.fastexp(x, "fast"))
+    want = np.asarray(ref.fastexp_ref(x.astype(jnp.float32), "fast"))
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-6)

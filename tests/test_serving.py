@@ -1,0 +1,80 @@
+"""Serving paths: chunked prefill -> cache -> decode continuation, the
+continuous-batching engine, and the paper-inspired fastexp softmax."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import decoder
+from repro.nn.attention import chunked_attention
+from repro.nn.param import split_tree
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "deepseek-v3-671b"])
+def test_prefill_then_decode_matches_teacher_forcing(arch):
+    cfg = get_config(arch, smoke=True)
+    params, _ = split_tree(decoder.init_params(jax.random.PRNGKey(0), cfg))
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 12)), jnp.int32
+    )
+    lg_tf, _ = decoder.apply(params, toks, cfg)
+    logits_pf, caches, _ = decoder.prefill(params, toks[:, :8], cfg, max_len=16)
+    rel = np.abs(
+        np.asarray(logits_pf[:, :8], np.float32) - np.asarray(lg_tf[:, :8], np.float32)
+    ).max() / (np.abs(np.asarray(lg_tf[:, :8], np.float32)).max() + 1e-6)
+    assert rel < 0.05
+    c = caches
+    for t in range(8, 11):
+        lg, c = decoder.decode_step(params, toks[:, t : t + 1], c, jnp.int32(t), cfg)
+        tf = np.asarray(lg_tf[:, t], np.float32)
+        dc = np.asarray(lg[:, 0], np.float32)
+        assert np.abs(tf - dc).max() / (np.abs(tf).max() + 1e-6) < 0.06
+
+
+def test_prefill_rejects_ssm():
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    params, _ = split_tree(decoder.init_params(jax.random.PRNGKey(0), cfg))
+    with pytest.raises(NotImplementedError):
+        decoder.prefill(params, jnp.zeros((1, 4), jnp.int32), cfg, max_len=8)
+
+
+def test_serve_engine_end_to_end():
+    from repro.launch.serve import Request, ServeEngine
+
+    cfg = get_config("gemma-2b", smoke=True)
+    params, _ = split_tree(decoder.init_params(jax.random.PRNGKey(0), cfg))
+    engine = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                max_new=5)
+        for i in range(4)
+    ]
+    pending = list(reqs)
+    steps = 0
+    while pending or any(s is not None for s in engine.slots):
+        while pending and engine.add_request(pending[0]):
+            pending.pop(0)
+        engine.step()
+        steps += 1
+        assert steps < 500
+    assert all(len(r.out) == 5 for r in reqs)
+
+
+def test_fastexp_softmax_attention_close_to_exact():
+    """Paper §2.4 inside the LM softmax: attention outputs must stay within
+    the approximation's error envelope of the exact path."""
+    rng = np.random.default_rng(3)
+    B, S, H, D = 2, 64, 4, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    exact = chunked_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    fast = chunked_attention(
+        q, k, v, causal=True, q_chunk=16, kv_chunk=16, softmax_exp="fast"
+    )
+    err = np.abs(np.asarray(exact, np.float32) - np.asarray(fast, np.float32))
+    denom = np.abs(np.asarray(exact, np.float32)).max()
+    assert err.max() / denom < 0.08, err.max() / denom  # ~2x the 4% exp envelope

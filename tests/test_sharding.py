@@ -1,0 +1,96 @@
+"""Sharding rule resolution: divisibility fallback, axis-conflict dedup."""
+
+import hypothesis.strategies as st
+import jax
+import numpy as np
+import pytest
+from hypothesis import given
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.sharding import ShardingCtx
+from repro.sharding.ctx import DEFAULT_RULES
+
+
+def fake_mesh(shape=(2, 2), axes=("data", "model")):
+    devs = np.asarray(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+@pytest.fixture
+def ctx():
+    return ShardingCtx(fake_mesh())
+
+
+def test_basic_resolution(ctx):
+    assert ctx.spec(("batch", None, "mlp"), (8, 4, 8)) == P("data", None, "model")
+
+
+def test_divisibility_fallback(ctx):
+    # dim 3 doesn't divide by 2 -> replicated
+    assert ctx.spec(("mlp",), (3,)) == P(None)
+    assert ctx.spec(("mlp",), (4,)) == P("model")
+
+
+def test_axis_conflict_dedup(ctx):
+    # both logical names map to "model": second one must fall back
+    spec = ctx.spec(("heads", "kv_heads"), (4, 4))
+    assert spec == P("model", None)
+
+
+def test_missing_mesh_axis_ignored(ctx):
+    # "pod" not in this mesh: batch maps to data only
+    assert ctx.spec(("batch",), (4,)) == P("data")
+
+
+def test_multi_axis_logical():
+    ctx3 = ShardingCtx(fake_mesh((2, 2, 1), ("pod", "data", "model")))
+    assert ctx3.spec(("batch",), (8,)) == P(("pod", "data"))
+    # 6 % (2*2) != 0 -> replicate
+    assert ctx3.spec(("batch",), (6,)) == P(None)
+
+
+@given(
+    dims=st.tuples(st.integers(1, 33), st.integers(1, 33)),
+    names=st.tuples(
+        st.sampled_from(sorted(DEFAULT_RULES)), st.sampled_from(sorted(DEFAULT_RULES))
+    ),
+)
+def test_spec_never_repeats_axes_property(dims, names):
+    ctx = ShardingCtx(fake_mesh())
+    spec = ctx.spec(names, dims)
+    flat = []
+    for part in spec:
+        if part is None:
+            continue
+        flat.extend(part if isinstance(part, tuple) else (part,))
+    assert len(flat) == len(set(flat))
+    # divisibility always respected
+    for d, part in zip(dims, spec):
+        if part is None:
+            continue
+        size = ctx.axis_size(part if isinstance(part, tuple) else (part,))
+        assert d % size == 0
+
+
+def test_shard_constraint_noop_without_ctx():
+    import jax.numpy as jnp
+    from repro.sharding import shard_constraint
+
+    x = jnp.ones((4, 4))
+    y = shard_constraint(x, ("batch", None))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_param_logical_axes_roundtrip():
+    from repro.configs.registry import get_config
+    from repro.models import decoder
+    from repro.nn.param import split_tree
+
+    cfg = get_config("qwen2.5-14b", smoke=True)
+    tree = jax.eval_shape(lambda k: decoder.init_params(k, cfg), jax.random.PRNGKey(0))
+    values, logical = split_tree(tree)
+    vleaves = jax.tree_util.tree_leaves(values)
+    lleaves = jax.tree_util.tree_leaves(logical, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(vleaves) == len(lleaves)
+    for v, l in zip(vleaves, lleaves):
+        assert len(l) == v.ndim, (l, v.shape)  # logical rank matches value rank

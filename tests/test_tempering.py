@@ -1,0 +1,61 @@
+"""Parallel tempering + QMC helpers."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ising, metropolis, qmc, tempering
+
+
+def test_lane_energy_matches_reference():
+    m = ising.random_layered_model(n=6, L=8, seed=3, beta=0.7)
+    sp = ising.init_spins(m, 5)
+    ls = metropolis.make_lane_state(m, sp, 4)
+    e_lane = float(
+        tempering.lane_energy(
+            ls.spins, jnp.asarray(m.h), jnp.asarray(m.space_nbr),
+            jnp.asarray(m.space_J), jnp.asarray(m.tau_J), m.n,
+        )
+    )
+    assert abs(e_lane - ising.energy(m, sp)) < 1e-3 * max(1, abs(ising.energy(m, sp)))
+
+
+def test_pt_round_runs_and_swaps():
+    m = ising.random_layered_model(n=6, L=8, seed=3)
+    betas = np.linspace(0.2, 2.5, 8)
+    state, energies = tempering.run_parallel_tempering(m, betas, 8, V=4, seed=2)
+    assert int(state.swap_propose) > 0
+    assert energies.shape == (8,)
+    # The multiset of betas is preserved by swapping.
+    np.testing.assert_allclose(
+        np.sort(np.asarray(state.betas)), np.sort(betas.astype(np.float32)), rtol=1e-6
+    )
+
+
+def test_pt_cold_replica_reaches_lower_energy():
+    m = ising.random_layered_model(n=8, L=8, seed=1)
+    betas = np.array([0.1, 3.0])
+    state, energies = tempering.run_parallel_tempering(
+        m, betas, 20, V=4, seed=3, sweeps_per_round=2
+    )
+    cold = np.asarray(state.betas).argmax()
+    hot = np.asarray(state.betas).argmin()
+    assert energies[cold] < energies[hot]
+
+
+def test_tau_coupling_monotonic_in_gamma():
+    # Stronger transverse field -> weaker slice coupling.
+    js = [qmc.tau_coupling(2.0, g, 32) for g in (0.5, 1.0, 2.0, 4.0)]
+    assert all(a > b for a, b in zip(js, js[1:]))
+    assert all(j > 0 for j in js)
+
+
+def test_qmc_anneal_schedule_end_to_end():
+    pb = qmc.random_problem(6, 8, seed=4)
+    spins = ising.init_spins(pb.layered_model(2.0, 3.0), seed=0)
+    energies = []
+    for beta, gamma in qmc.anneal_schedule(4, beta=2.0):
+        m = pb.layered_model(beta, gamma)
+        spins, _ = metropolis.run_sweeps(m, spins, "a2", 3, seed=int(gamma * 100))
+        energies.append(ising.energy(m, spins))
+    assert np.isfinite(energies).all()
