@@ -1,9 +1,23 @@
 """Pallas kernel benchmarks + structural VMEM accounting (TPU target).
 
 Wall times below run the kernels in interpret mode on CPU — meaningful
-only as correctness-path checks, NOT perf; the perf-relevant output is the
-structural accounting: VMEM working set per replica vs the 16 MiB budget,
-vector-op count per row, and the paper-shape throughput model.
+only as correctness-path checks and for *relative* launch-structure
+comparisons; the perf-relevant output is the structural accounting: VMEM
+working set per replica vs the 16 MiB budget, and the paper-shape
+throughput model.
+
+The headline comparison (`launch_structure_compare`) times the two sweep
+launch structures the engine can dispatch to, at replica batches
+B in {1, 8, 115} (115 = the paper's production replica count):
+
+  per-sweep path   one `pallas_call` per sweep, uniforms generated
+                   host-side by the interlaced MT19937 and shipped in
+                   (the seed architecture).
+  fused path       ONE `pallas_call` advancing num_sweeps x B
+                   replica-sweeps with the MT19937 twist/temper fused
+                   into the kernel body (no host round-trips).
+
+Reported as us/sweep (whole batch advanced one sweep).
 """
 
 from __future__ import annotations
@@ -12,24 +26,75 @@ import numpy as np
 
 from benchmarks.common import time_fn
 from repro.configs.ising_qmc import CONFIG as PAPER
-from repro.core import ising
+from repro.core import ising, mt19937 as mt
+from repro.core.engine import SweepEngine
 from repro.kernels import ops
 
 VMEM_BUDGET = 16 * 1024 * 1024
+LANES = 128
 
 
-def vmem_accounting(n: int, L: int, lanes: int = 128):
+def vmem_accounting(n: int, L: int, lanes: int = LANES):
     rows = (L // lanes) * n
     state_bytes = rows * lanes * 4  # f32
     arrays = {
         "spins": state_bytes,
         "h_space": state_bytes,
         "h_tau": state_bytes,
-        "uniforms": state_bytes,
-        "outputs(3)": 3 * state_bytes,
+        "mt19937_state": mt.N * lanes * 4,  # fused in-kernel RNG, no uniforms
+        "outputs(3+rng)": 3 * state_bytes + mt.N * lanes * 4,
     }
     total = sum(arrays.values())
     return rows, arrays, total
+
+
+def launch_structure_compare(
+    batches=(1, 8, 115), num_sweeps: int = 8, n: int = 4, L: int = 256
+):
+    """Fused multi-sweep single-launch vs one-launch-per-sweep + host RNG.
+
+    The per-sweep baseline is jitted end-to-end (one cached callable, like
+    the fused path) so the comparison isolates launch structure and host
+    RNG round-trips, not Python dispatch overhead.
+    """
+    import jax
+
+    m = ising.random_layered_model(n=n, L=L, seed=1, beta=1.0)
+    rows_out = []
+    for B in batches:
+        eng = SweepEngine.build(m, rung="a4", backend="pallas", batch=B, V=LANES)
+        carry = eng.init_carry(seed=0)
+        fused_fn = eng.run_fn(num_sweeps)
+        dt_fused, _ = time_fn(fused_fn, carry, iters=5, warmup=1)
+
+        # Seed architecture: host-side bulk RNG + one kernel launch per sweep.
+        nbr, J2, tau2 = (
+            eng.tables["base_nbr"], eng.tables["base_J2"], eng.tables["tau_J2"],
+        )
+        rows = eng.rows
+
+        @jax.jit
+        def per_sweep_path(c):
+            state = (c.spins, c.h_space, c.h_tau)
+            rng = c.rng
+            for _ in range(num_sweeps):
+                rng, u = mt.mt_uniforms_count(rng, rows)
+                u = u.reshape(rows, B, LANES).transpose(1, 0, 2)
+                state = ops.metropolis_sweep(
+                    *state, u, nbr, J2, tau2, c.betas, n=m.n
+                )
+            return state
+
+        dt_seed, _ = time_fn(per_sweep_path, carry, iters=5, warmup=1)
+        us_f = dt_fused / num_sweeps * 1e6
+        us_s = dt_seed / num_sweeps * 1e6
+        rows_out.append(
+            (f"kernel_fused_B{B}_us_per_sweep", us_f,
+             f"{us_f:.0f}us vs per-sweep {us_s:.0f}us = {dt_seed/dt_fused:.2f}x "
+             "(interpret mode)")
+        )
+        rows_out.append((f"kernel_persweep_B{B}_us_per_sweep", us_s, ""))
+    return rows_out
 
 
 def run():
@@ -45,6 +110,8 @@ def run():
     rows_out.append(
         ("kernel_vmem_max_replicas_resident", 0.0, f"{max_replicas}")
     )
+    # Launch-structure comparison: fused multi-sweep vs seed per-sweep path.
+    rows_out += launch_structure_compare()
     # interpret-mode correctness-path timing (small shape).
     m = ising.random_layered_model(n=4, L=256, seed=1, beta=1.0)
     inputs = ops.make_kernel_inputs(m, batch=1, seed=0)
@@ -52,9 +119,6 @@ def run():
     rows_out.append(
         ("kernel_sweep_interpret_ms", dt * 1e6, f"{dt*1e3:.1f}ms (interpret mode)")
     )
-    import jax.numpy as jnp
-    from repro.core import mt19937 as mt
-
     st = mt.mt_init(np.arange(128, dtype=np.uint32))
     dt, out = time_fn(lambda: ops.mt_next_block(st), iters=3, warmup=1)
     rows_out.append(

@@ -25,7 +25,8 @@ import numpy as np
 
 from benchmarks.common import time_fn
 from repro.configs.ising_qmc import IsingConfig
-from repro.core import ising, metropolis
+from repro.core import ising
+from repro.core.engine import SweepEngine
 
 LADDER = ("a1", "a2", "a3", "a4")
 
@@ -44,7 +45,8 @@ def run(cfg: IsingConfig | None = None, sweeps: int = 4, V: int = 128):
     times = {}
     for impl in LADDER:
         n_sweeps = 1 if impl == "a3" else sweeps  # a3's per-lane loop is slow
-        fn, carry = metropolis.make_sweeper(m, impl, num_sweeps=n_sweeps, seed=42, V=V)
+        eng = SweepEngine.build(m, rung=impl, backend="jnp", batch=1, V=V)
+        fn, carry = eng.run_fn(n_sweeps), eng.init_carry(seed=42)
         dt, _ = time_fn(fn, carry, iters=3, warmup=1)  # steady-state: jit cached
         per_sweep = dt / n_sweeps
         times[impl] = per_sweep

@@ -28,6 +28,21 @@ def run():
         dt, out = time_fn(gen, iters=3, warmup=1)
         n = out.size
         rows.append((f"mt19937_V{V}", dt / n * 1e6, f"{n/dt/1e6:.2f}Mrand/s"))
+
+    # Pallas kernel in interpret mode (correctness rung): fused
+    # twist+temper+float-convert emitting uniforms directly.
+    from repro.kernels import mt19937_kernel
+
+    state = mt.mt_init(np.arange(128, dtype=np.uint32) + 1)
+    dt, out = time_fn(
+        lambda: mt19937_kernel.mt_uniform_blocks_kernel(state, blocks, interpret=True),
+        iters=3, warmup=1,
+    )
+    n = out[1].size
+    rows.append(
+        (f"mt19937_kernel_V128", dt / n * 1e6,
+         f"{n/dt/1e6:.2f}Mrand/s (interpret mode)")
+    )
     return rows
 
 

@@ -7,8 +7,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
   rng           §3 (interlaced MT19937 throughput)
   kernels       Pallas kernel structural accounting + interpret timings
   roofline      summary of the dry-run roofline table if present
+  smoke         every SweepEngine (rung, backend) combination on a tiny
+                model, correctness-only, <60 s — the CI gate
 
 Run:  PYTHONPATH=src python -m benchmarks.run [section ...]
+      PYTHONPATH=src python -m benchmarks.run --smoke
 """
 
 from __future__ import annotations
@@ -19,7 +22,10 @@ import sys
 
 
 def main() -> None:
-    sections = sys.argv[1:] or [
+    args = sys.argv[1:]
+    if "--smoke" in args:
+        args = [a for a in args if a != "--smoke"] + ["smoke"]
+    sections = args or [
         "ladder", "waitprob", "fastexp", "rng", "kernels", "roofline",
     ]
     rows = []
@@ -46,6 +52,10 @@ def main() -> None:
                 from benchmarks import kernel_bench
 
                 rows += kernel_bench.run()
+            elif section == "smoke":
+                from benchmarks import smoke
+
+                rows += smoke.run()
             elif section == "roofline":
                 path = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
                 if os.path.exists(path):

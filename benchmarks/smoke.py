@@ -1,0 +1,76 @@
+"""Smoke section: every (rung, backend) combination on a tiny model, <60 s.
+
+The CI gate for the engine dispatch table: each registered combination is
+built, run for a couple of sweeps, and sanity-checked (spins stay in
+{-1, +1}; jnp vs pallas-interpret agree bit-exactly on the shared a4 rung;
+one parallel-tempering round runs on the batched engine path).  Timing is
+reported but not asserted — correctness-path only.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ising, tempering
+from repro.core.engine import RUNGS, SweepEngine
+
+LANES = 128
+
+
+def run():
+    rows = []
+
+    def timed(name, fn):
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+        rows.append((f"smoke_{name}", dt * 1e6, out))
+        return out
+
+    # Every rung on the jnp backend (narrow V keeps the tiny model legal).
+    m_small = ising.random_layered_model(n=4, L=16, seed=0, beta=1.0)
+    for rung in RUNGS:
+        def one(rung=rung):
+            eng = SweepEngine.build(m_small, rung=rung, backend="jnp", batch=2, V=4)
+            carry = eng.run(eng.init_carry(seed=1), 2)
+            spins = eng.spins_flat(carry)
+            assert set(np.unique(spins)) <= {-1.0, 1.0}, rung
+            return "ok"
+        timed(f"jnp_{rung}", one)
+
+    # a4 on the pallas backend (interpret on CPU) + bit-parity vs jnp.
+    m_lane = ising.random_layered_model(n=4, L=2 * LANES, seed=1, beta=1.0)
+
+    def pallas_parity():
+        ej = SweepEngine.build(m_lane, rung="a4", backend="jnp", batch=2, V=LANES)
+        ep = SweepEngine.build(m_lane, rung="a4", backend="pallas", batch=2, V=LANES)
+        cj, cp = ej.run(ej.init_carry(seed=2), 2), ep.run(ep.init_carry(seed=2), 2)
+        for f in cj._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(cj, f)), np.asarray(getattr(cp, f)), err_msg=f
+            )
+        return "bit-exact"
+
+    timed("pallas_a4_parity", pallas_parity)
+
+    # One PT round per backend on the batched engine path.
+    for backend in ("jnp", "pallas"):
+        def pt(backend=backend):
+            V = 4 if backend == "jnp" else LANES
+            m = m_small if backend == "jnp" else m_lane
+            betas = np.linspace(0.5, 2.0, 3)
+            state, energies = tempering.run_parallel_tempering(
+                m, betas, 2, V=V, seed=3, backend=backend
+            )
+            assert np.isfinite(energies).all()
+            return f"propose={int(state.swap_propose)}"
+        timed(f"pt_{backend}", pt)
+
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

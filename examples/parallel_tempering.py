@@ -5,8 +5,14 @@ adjacent-temperature swap proposals (the paper's 115-model production
 setup, scaled down), demonstrating that tempering finds lower energies
 than independent quenches.
 
-  PYTHONPATH=src python examples/parallel_tempering.py
+Replicas are the SweepEngine's batch dimension, so the sweep phase of each
+round is one batched engine call; with ``--backend pallas`` it is a single
+fused multi-sweep kernel launch (in-kernel RNG, interpret mode on CPU).
+
+  PYTHONPATH=src python examples/parallel_tempering.py [--backend jnp|pallas]
 """
+
+import argparse
 
 import numpy as np
 
@@ -14,23 +20,35 @@ from repro.core import ising, metropolis, tempering
 
 
 def main():
-    m = ising.random_layered_model(n=16, L=16, seed=3, beta=1.0)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp")
+    args = ap.parse_args()
+
+    if args.backend == "pallas":
+        # The kernel's lane layout needs L to be a multiple of 128 lanes.
+        m = ising.random_layered_model(n=8, L=256, seed=3, beta=1.0)
+        V, rounds, quench_v = 128, 10, 128
+    else:
+        m = ising.random_layered_model(n=16, L=16, seed=3, beta=1.0)
+        V, rounds, quench_v = 4, 30, 4
     betas = np.geomspace(0.2, 4.0, 10)
 
     state, energies = tempering.run_parallel_tempering(
-        m, betas, num_rounds=30, V=4, seed=0, sweeps_per_round=2
+        m, betas, num_rounds=rounds, V=V, seed=0, sweeps_per_round=2,
+        backend=args.backend,
     )
     acc = int(state.swap_accept)
     prop = int(state.swap_propose)
     cold_slot = int(np.asarray(state.betas).argmax())
+    print(f"backend: {args.backend} ({len(betas)} replicas batched per round)")
     print(f"swap acceptance: {acc}/{prop} = {acc/max(prop,1):.2%}")
     print(f"energies per slot: {np.round(energies, 1)}")
     print(f"coldest replica energy: {energies[cold_slot]:.2f}")
 
     # Baseline: independent quench at the coldest temperature only.
-    mq = ising.random_layered_model(n=16, L=16, seed=3, beta=float(betas[-1]))
+    mq = ising.random_layered_model(n=m.n, L=m.L, seed=3, beta=float(betas[-1]))
     sq = ising.init_spins(mq, seed=0)
-    sq, _ = metropolis.run_sweeps(mq, sq, "a4", 60, seed=1, V=4)
+    sq, _ = metropolis.run_sweeps(mq, sq, "a4", 2 * rounds, seed=1, V=quench_v)
     e_quench = ising.energy(mq, sq)
     print(f"independent quench at beta={betas[-1]:.1f}: {e_quench:.2f}")
     print("tempering <= quench + tolerance:",

@@ -1,0 +1,388 @@
+"""`SweepEngine` — the single construction path for Metropolis sweeps.
+
+The paper's thesis is that explicit vectorization (CPU SSE lanes) and
+explicit memory coalescing (GPU warps) are the *same* transformation over
+different memory layouts.  The engine encodes that: every (rung, backend)
+combination is one registration in a dispatch table, not a hand-rolled
+driver.  One API owns the full sweep lifecycle:
+
+    eng = SweepEngine.build(model, rung="a4", backend="pallas", batch=115)
+    carry = eng.init_carry(seed=0)
+    carry = eng.run(carry, num_sweeps)       # cached jit per num_sweeps
+    spins = eng.spins_flat(carry)            # (B, N) layer-major
+
+Carry layout (`SweepCarry`) is batched over replicas everywhere so that
+parallel tempering's 115-replica production scenario is the *same* code as
+a single-replica benchmark with ``batch=1``:
+
+    spins/h_space/h_tau   (B, N) f32          for flat rungs  a1/a2
+                          (B, rows, V) f32    for lane rungs  a3/a4
+    betas                 (B,)  f32           per-replica inverse temperature
+    rng                   (624, B) uint32     flat rungs: one scalar MT19937
+                                              per replica
+                          (624, B*V) uint32   lane rungs: V interlaced
+                                              generators per replica
+                                              (replica b owns columns
+                                              b*V..(b+1)*V)
+
+RNG placement per backend (see DESIGN.md §RNG fusion):
+
+  * ``backend="jnp"``    — uniforms are generated on the host side of the
+    sweep: one `mt19937.mt_uniform_blocks` call per sweep produces
+    ceil(rows/624) blocks for all B*V lanes at once, and the first ``rows``
+    rows feed the vmapped sweep.
+  * ``backend="pallas"`` — the MT19937 twist/temper runs *inside* the sweep
+    kernel (kernels/metropolis_kernel.py): each grid step owns its
+    replica's (624, 128) state block in VMEM, regenerates its uniforms per
+    sweep, and loops ``num_sweeps`` sweeps in one `pallas_call`.
+
+Both paths evaluate the identical twist -> temper -> 24-bit-float pipeline
+on the identical per-replica state columns, so jnp and Pallas(interpret)
+runs are bit-exact (tested in tests/test_engine.py).
+
+Adding a backend (TPU non-interpret, Triton/GPU, ...) is a registration:
+
+    register_backend("mybackend", builder)
+
+where ``builder(engine) -> fn(carry, num_sweeps) -> carry`` closes over the
+engine's precomputed model tables.  The engine wraps the returned function
+in one persistent ``jax.jit`` (num_sweeps static), so repeated `run` calls
+hit the compile cache — the steady-state benchmarking contract that
+`metropolis.make_sweeper` used to provide.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import ising, metropolis, mt19937 as mt, reorder
+
+f32 = jnp.float32
+
+RUNGS = ("a1", "a2", "a3", "a4")
+FLAT_RUNGS = ("a1", "a2")
+LANE_RUNGS = ("a3", "a4")
+
+#: Default exp flavour per rung (the paper's A.1 uses exact exp; every
+#: later rung uses the bit-trick fastexp).
+DEFAULT_EXP = {"a1": "exact", "a2": "fast", "a3": "fast", "a4": "fast"}
+
+#: Seed-scrambling multiplier for per-lane MT19937 seeds (Knuth's 2^32/phi,
+#: the same constant the seed code has always used).
+LANE_SEED_MULT = np.uint32(2654435761)
+
+
+class SweepCarry(NamedTuple):
+    """Batched sweep state: everything `run` needs, nothing it doesn't."""
+
+    spins: jax.Array  # (B, N) | (B, rows, V)
+    h_space: jax.Array  # same shape as spins
+    h_tau: jax.Array  # same shape as spins
+    betas: jax.Array  # (B,)
+    rng: jax.Array  # (624, B) | (624, B*V) uint32
+
+
+def lane_seeds(batch: int, V: int, seed: int) -> np.ndarray:
+    """Per-lane MT19937 seeds for `batch` replicas of `V` interlaced lanes.
+
+    Replica ``b`` owns lanes ``b*V .. (b+1)*V`` — for batch=1 this matches
+    the historical `metropolis` seeding and for batch=R the historical
+    `tempering` seeding, so both shim paths stay bit-exact.
+    """
+    return (
+        np.arange(batch * V, dtype=np.uint32) * LANE_SEED_MULT + np.uint32(seed)
+    )
+
+
+# -----------------------------------------------------------------------------
+# Backend registry.
+# -----------------------------------------------------------------------------
+
+_BACKENDS: dict[str, Callable[["SweepEngine"], Callable]] = {}
+
+
+def register_backend(name: str, builder: Callable[["SweepEngine"], Callable]) -> None:
+    """Register ``builder(engine) -> fn(carry, num_sweeps) -> carry``.
+
+    The builder runs once at `SweepEngine.build` time and may close over
+    `engine.tables` (precomputed jnp model arrays).  The returned function
+    must be jit-traceable with ``num_sweeps`` static.
+    """
+    _BACKENDS[name] = builder
+
+
+def backends() -> tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+class SweepEngine:
+    """One sweep lifecycle: model tables + dispatch + cached jit."""
+
+    def __init__(
+        self,
+        model: ising.LayeredModel,
+        rung: str,
+        backend: str,
+        batch: int,
+        V: int,
+        exp_flavor: str,
+        interpret: bool | None,
+        tables: dict,
+        replica_tile: int | None = None,
+    ):
+        self.model = model
+        self.rung = rung
+        self.backend = backend
+        self.batch = batch
+        self.V = V
+        self.exp_flavor = exp_flavor
+        self.interpret = interpret
+        self.tables = tables
+        self.replica_tile = replica_tile
+        self.rows = tables.get("rows")  # lane rungs only
+        builder = _BACKENDS[backend]
+        self._run_jit = jax.jit(builder(self), static_argnums=(1,))
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        model: ising.LayeredModel,
+        rung: str = "a4",
+        backend: str = "jnp",
+        *,
+        batch: int = 1,
+        V: int = 4,
+        exp_flavor: str | None = None,
+        interpret: bool | None = None,
+        replica_tile: int | None = None,
+    ) -> "SweepEngine":
+        """``replica_tile`` (pallas only) sizes the kernel's resident
+        replica group to VMEM — must divide ``batch``; None = all of it."""
+        if rung not in RUNGS:
+            raise ValueError(f"unknown rung {rung!r}; choose from {RUNGS}")
+        if backend not in _BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; registered: {backends()}"
+            )
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        exp_flavor = exp_flavor or DEFAULT_EXP[rung]
+        tables: dict = {}
+        if rung in FLAT_RUNGS:
+            if rung == "a1":
+                ge, J, istau, incident = ising.original_arrays(model)
+                tables.update(
+                    graph_edges=jnp.asarray(ge),
+                    J=jnp.asarray(J),
+                    is_tau=jnp.asarray(istau),
+                    incident=jnp.asarray(incident),
+                )
+            else:
+                targets, J2 = ising.flat_arrays(model)
+                tables.update(targets=jnp.asarray(targets), J2=jnp.asarray(J2))
+        else:
+            tables["rows"] = reorder.check_lane_shape(model.n, model.L, V)
+            tables.update(
+                base_nbr=jnp.asarray(model.space_nbr),
+                base_J2=jnp.asarray(2.0 * model.space_J),
+                tau_J2=jnp.asarray(2.0 * model.tau_J),
+                # Undoubled couplings + fields, for consumers that evaluate
+                # energies over the lane layout (e.g. tempering swaps).
+                base_J=jnp.asarray(model.space_J),
+                tau_J=jnp.asarray(model.tau_J),
+                h=jnp.asarray(model.h),
+            )
+        if backend == "pallas":
+            if rung != "a4":
+                raise ValueError(
+                    "backend='pallas' implements the fully-vectorized rung "
+                    f"only; got rung={rung!r} (use rung='a4')"
+                )
+            from repro.kernels import ops  # deferred: kernels are optional
+
+            if V != ops.LANES:
+                raise ValueError(
+                    f"backend='pallas' requires V={ops.LANES} (TPU lanes); got V={V}"
+                )
+            if replica_tile is not None and batch % replica_tile != 0:
+                raise ValueError(
+                    f"replica_tile {replica_tile} must divide batch {batch}"
+                )
+        elif replica_tile is not None:
+            raise ValueError("replica_tile is a pallas-backend knob")
+        return cls(
+            model, rung, backend, batch, V, exp_flavor, interpret, tables,
+            replica_tile,
+        )
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def init_carry(
+        self,
+        seed: int = 0,
+        spins: np.ndarray | None = None,
+        betas: np.ndarray | None = None,
+    ) -> SweepCarry:
+        """Initial batched carry.
+
+        ``spins`` may be None (per-replica random init from ``seed``), one
+        flat (N,) configuration (replicated), or a (B, N) stack.  ``betas``
+        defaults to the model beta on every replica.
+        """
+        m, B = self.model, self.batch
+        if spins is None:
+            spin_list = [ising.init_spins(m, seed=seed * 1000 + b) for b in range(B)]
+        else:
+            spins = np.asarray(spins, np.float32)
+            if spins.ndim == 1:
+                spin_list = [spins] * B
+            else:
+                if spins.shape[0] != B:
+                    raise ValueError(f"spins batch {spins.shape[0]} != {B}")
+                spin_list = list(spins)
+        if betas is None:
+            betas = np.full((B,), m.beta, np.float32)
+        betas = jnp.asarray(betas, f32)
+
+        if self.rung in FLAT_RUNGS:
+            states = [metropolis.make_flat_state(m, sp) for sp in spin_list]
+            # One scalar generator per replica, seeds scrambled exactly like
+            # the lane path (consecutive seeds would give nearby-seeded runs
+            # bit-identical streams); batch=1 reduces to mt_init(seed), the
+            # historical scalar seeding.
+            rng = mt.mt_init(lane_seeds(B, 1, seed))
+        else:
+            states = [metropolis.make_lane_state(m, sp, self.V) for sp in spin_list]
+            rng = mt.mt_init(lane_seeds(B, self.V, seed))
+        stacked = [jnp.stack([s[i] for s in states]) for i in range(3)]
+        return SweepCarry(*stacked, betas=betas, rng=rng)
+
+    def run(self, carry: SweepCarry, num_sweeps: int) -> SweepCarry:
+        """Advance every replica by ``num_sweeps`` Metropolis sweeps."""
+        return self._run_jit(carry, int(num_sweeps))
+
+    def run_fn(self, num_sweeps: int) -> Callable[[SweepCarry], SweepCarry]:
+        """Steady-state callable for benchmarking: ``fn(carry) -> carry``.
+
+        Bound to the engine's persistent jit, so repeated timing calls hit
+        the compile cache.
+        """
+        n = int(num_sweeps)
+        return lambda carry: self._run_jit(carry, n)
+
+    # -- views ----------------------------------------------------------------
+
+    def spins_flat(self, carry: SweepCarry) -> np.ndarray:
+        """(B, N) spins in flat layer-major order, comparable across rungs."""
+        m = self.model
+        if self.rung in FLAT_RUNGS:
+            return np.asarray(carry.spins)
+        return np.stack(
+            [
+                reorder.from_lane(np.asarray(s), m.n, m.L, self.V)
+                for s in carry.spins
+            ]
+        )
+
+    def state_of(self, carry: SweepCarry, b: int = 0):
+        """Replica ``b`` as the historical per-replica NamedTuple."""
+        cls = metropolis.FlatState if self.rung in FLAT_RUNGS else metropolis.LaneState
+        return cls(carry.spins[b], carry.h_space[b], carry.h_tau[b])
+
+
+# -----------------------------------------------------------------------------
+# jnp backend: vmapped pure sweep functions + host-side bulk RNG.
+# -----------------------------------------------------------------------------
+
+
+def _build_jnp(eng: SweepEngine) -> Callable:
+    m, t = eng.model, eng.tables
+    exp_flavor = eng.exp_flavor
+    N = m.num_spins
+
+    if eng.rung == "a1":
+        def one(spins, hs, ht, beta, u):
+            return metropolis.sweep_original(
+                metropolis.FlatState(spins, hs, ht),
+                t["graph_edges"], t["J"], t["is_tau"], t["incident"],
+                u, beta, exp_flavor,
+            )
+        count = N
+    elif eng.rung == "a2":
+        def one(spins, hs, ht, beta, u):
+            return metropolis.sweep_flat(
+                metropolis.FlatState(spins, hs, ht),
+                t["targets"], t["J2"], u, beta, m.space_degree, exp_flavor,
+            )
+        count = N
+    else:
+        scalar_updates = eng.rung == "a3"
+
+        def one(spins, hs, ht, beta, u):
+            return metropolis.sweep_lane(
+                metropolis.LaneState(spins, hs, ht),
+                t["base_nbr"], t["base_J2"], t["tau_J2"],
+                u, beta, m.n, exp_flavor, scalar_updates=scalar_updates,
+            )
+        count = t["rows"]
+
+    B, lane = eng.batch, eng.rung in LANE_RUNGS
+    V = eng.V
+
+    def sweep_once(carry: SweepCarry) -> SweepCarry:
+        rng, u = mt.mt_uniforms_count(carry.rng, count)
+        if lane:
+            u = u.reshape(count, B, V).transpose(1, 0, 2)  # (B, rows, V)
+        else:
+            u = u.T  # (B, N)
+        st = jax.vmap(one)(carry.spins, carry.h_space, carry.h_tau, carry.betas, u)
+        return SweepCarry(st.spins, st.h_space, st.h_tau, carry.betas, rng)
+
+    def run(carry: SweepCarry, num_sweeps: int) -> SweepCarry:
+        return lax.scan(
+            lambda c, _: (sweep_once(c), None), carry, None, length=num_sweeps
+        )[0]
+
+    return run
+
+
+# -----------------------------------------------------------------------------
+# pallas backend: fused RNG + multi-sweep batched kernel, one launch per run.
+# -----------------------------------------------------------------------------
+
+
+def _build_pallas(eng: SweepEngine) -> Callable:
+    from repro.kernels import ops
+
+    m, t = eng.model, eng.tables
+
+    def run(carry: SweepCarry, num_sweeps: int) -> SweepCarry:
+        spins, hs, ht, rng = ops.metropolis_multisweep(
+            carry.spins,
+            carry.h_space,
+            carry.h_tau,
+            carry.rng,
+            t["base_nbr"],
+            t["base_J2"],
+            t["tau_J2"],
+            carry.betas,
+            n=m.n,
+            num_sweeps=num_sweeps,
+            exp_flavor=eng.exp_flavor,
+            interpret=eng.interpret,
+            replica_tile=eng.replica_tile,
+        )
+        return SweepCarry(spins, hs, ht, carry.betas, rng)
+
+    return run
+
+
+register_backend("jnp", _build_jnp)
+register_backend("pallas", _build_pallas)

@@ -1,4 +1,15 @@
-"""The Metropolis sweep ladder (paper Table 1), as pure-JAX implementations.
+"""The Metropolis sweep ladder (paper Table 1): PURE per-rung sweep functions.
+
+This module is intentionally driver-free.  Each function advances one
+replica by exactly one sweep, consuming a caller-provided buffer of
+uniforms (one per spin visit — the paper's bulk-RNG "result caching",
+§2.3).  Everything else the old drivers did — model-array setup, RNG
+plumbing, the sweep loop, batching over replicas, backend choice — now
+lives in ONE place, `repro.core.engine.SweepEngine`, which dispatches to
+these functions (``backend="jnp"``) or to the fused Pallas kernel
+(``backend="pallas"``; kernels/metropolis_kernel.py).  See DESIGN.md
+§Engine for the architecture and §RNG fusion for where uniforms are
+generated per backend and why the two backends stay bit-exact.
 
 Every implementation level of the paper is reproduced with the *same
 semantics* expressed over its own memory layout, so rungs can be compared
@@ -20,8 +31,9 @@ Hardware note (DESIGN.md §Adaptation): branch elimination (§2.1) has no
 direct JAX analogue — XLA always lowers to select/mask — so the A.1->A.2
 delta here measures the data-structure and caching effects only.
 
-All sweeps consume a pre-generated buffer of uniforms, one per spin visit
-(the paper's bulk-RNG "result caching", §2.3).
+``make_sweeper`` and ``run_sweeps`` remain as DEPRECATED thin shims over
+the engine (one release); new code should construct a `SweepEngine`
+directly.
 """
 
 from __future__ import annotations
@@ -34,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import ising, mt19937, reorder
+from repro.core import ising, reorder
 from repro.core.fastexp import EXP_FNS
 
 f32 = jnp.float32
@@ -221,16 +233,12 @@ def sweep_lane(
 
 
 # -----------------------------------------------------------------------------
-# Drivers: bulk RNG + scan over sweeps, per implementation rung.
+# DEPRECATED shims: the drivers now live in repro.core.engine.SweepEngine.
+# Kept for one release so existing callers keep working; both produce spins
+# bit-identical to the engine path (tests/test_engine.py).
 # -----------------------------------------------------------------------------
 
 LADDER = ("a1", "a2", "a3", "a4")
-
-
-def _uniform_buffer(rng_state, count: int):
-    blocks = -(-count // mt19937.N)  # ceil
-    rng_state, u = mt19937.mt_uniform_blocks(rng_state, blocks)
-    return rng_state, u
 
 
 def make_sweeper(
@@ -242,72 +250,19 @@ def make_sweeper(
     exp_flavor: str | None = None,
     V: int = 4,
 ):
-    """Build (jitted_fn, initial_carry) for steady-state benchmarking.
+    """DEPRECATED — use ``SweepEngine.build(...)`` + ``engine.run_fn``.
 
-    ``jitted_fn(carry) -> carry`` runs ``num_sweeps`` sweeps; the callable is
-    created ONCE so repeated timing calls hit the compile cache (run_sweeps
-    re-closes over the model every call and re-traces — fine for tests, not
-    for wall-clock measurement).
+    Build (jitted_fn, initial_carry) for steady-state benchmarking.
+    ``jitted_fn(carry) -> carry`` runs ``num_sweeps`` sweeps; the engine's
+    persistent jit means repeated timing calls hit the compile cache.
     """
-    N = m.num_spins
-    if impl == "a1":
-        exp_flavor = exp_flavor or "exact"
-        ge, J, istau, incident = (jnp.asarray(x) for x in ising.original_arrays(m))
-        state0 = make_flat_state(m, ising.init_spins(m, seed))
-        rng0 = mt19937.mt_init(seed)
+    from repro.core import engine as _engine
 
-        @jax.jit
-        def fn(carry):
-            def step(c, _):
-                st, rng = c
-                rng, u = _uniform_buffer(rng, N)
-                st = sweep_original(st, ge, J, istau, incident, u[:N], m.beta, exp_flavor)
-                return (st, rng), None
-
-            return lax.scan(step, carry, None, length=num_sweeps)[0]
-
-        return fn, (state0, rng0)
-    if impl == "a2":
-        exp_flavor = exp_flavor or "fast"
-        targets, J2 = (jnp.asarray(x) for x in ising.flat_arrays(m))
-        state0 = make_flat_state(m, ising.init_spins(m, seed))
-        rng0 = mt19937.mt_init(seed)
-
-        @jax.jit
-        def fn(carry):
-            def step(c, _):
-                st, rng = c
-                rng, u = _uniform_buffer(rng, N)
-                st = sweep_flat(st, targets, J2, u[:N], m.beta, m.space_degree, exp_flavor)
-                return (st, rng), None
-
-            return lax.scan(step, carry, None, length=num_sweeps)[0]
-
-        return fn, (state0, rng0)
-    if impl in ("a3", "a4"):
-        exp_flavor = exp_flavor or "fast"
-        rows = reorder.check_lane_shape(m.n, m.L, V)
-        state0 = make_lane_state(m, ising.init_spins(m, seed), V)
-        base_nbr = jnp.asarray(m.space_nbr)
-        base_J2 = jnp.asarray(2.0 * m.space_J)
-        tau_J2 = jnp.asarray(2.0 * m.tau_J)
-        rng0 = mt19937.mt_init(np.arange(V, dtype=np.uint32) * 2654435761 + seed)
-
-        @jax.jit
-        def fn(carry):
-            def step(c, _):
-                st, rng = c
-                rng, u = _uniform_buffer(rng, rows)
-                st = sweep_lane(
-                    st, base_nbr, base_J2, tau_J2, u[:rows], m.beta, m.n,
-                    exp_flavor, scalar_updates=(impl == "a3"),
-                )
-                return (st, rng), None
-
-            return lax.scan(step, carry, None, length=num_sweeps)[0]
-
-        return fn, (state0, rng0)
-    raise ValueError(impl)
+    eng = _engine.SweepEngine.build(
+        m, rung=impl, backend="jnp", batch=1, V=V, exp_flavor=exp_flavor
+    )
+    carry0 = eng.init_carry(seed=seed, spins=ising.init_spins(m, seed))
+    return eng.run_fn(num_sweeps), carry0
 
 
 def run_sweeps(
@@ -320,75 +275,17 @@ def run_sweeps(
     exp_flavor: str | None = None,
     V: int = 4,
 ):
-    """Run ``num_sweeps`` Metropolis sweeps with the given ladder rung.
+    """DEPRECATED — use ``SweepEngine.build(...)`` + ``engine.run``.
 
+    Run ``num_sweeps`` Metropolis sweeps with the given ladder rung.
     Returns final spins in FLAT (layer-major) order regardless of rung, so
     results are directly comparable across the ladder.
     """
-    N = m.num_spins
-    if impl == "a1":
-        exp_flavor = exp_flavor or "exact"
-        ge, J, istau, incident = (jnp.asarray(x) for x in ising.original_arrays(m))
-        state = make_flat_state(m, spins)
-        rng = mt19937.mt_init(seed)  # single scalar generator, like A.1
+    from repro.core import engine as _engine
 
-        def step(carry, _):
-            state, rng = carry
-            rng, u = _uniform_buffer(rng, N)
-            state = sweep_original(
-                state, ge, J, istau, incident, u[:N], m.beta, exp_flavor
-            )
-            return (state, rng), None
-
-        (state, _), _ = lax.scan(step, (state, rng), None, length=num_sweeps)
-        return np.asarray(state.spins), state
-
-    if impl == "a2":
-        exp_flavor = exp_flavor or "fast"
-        targets, J2 = (jnp.asarray(x) for x in ising.flat_arrays(m))
-        state = make_flat_state(m, spins)
-        rng = mt19937.mt_init(seed)
-
-        def step(carry, _):
-            state, rng = carry
-            rng, u = _uniform_buffer(rng, N)
-            state = sweep_flat(
-                state, targets, J2, u[:N], m.beta, m.space_degree, exp_flavor
-            )
-            return (state, rng), None
-
-        (state, _), _ = lax.scan(step, (state, rng), None, length=num_sweeps)
-        return np.asarray(state.spins), state
-
-    if impl in ("a3", "a4"):
-        exp_flavor = exp_flavor or "fast"
-        rows = reorder.check_lane_shape(m.n, m.L, V)
-        state = make_lane_state(m, spins, V)
-        base_nbr = jnp.asarray(m.space_nbr)
-        base_J2 = jnp.asarray(2.0 * m.space_J)
-        tau_J2 = jnp.asarray(2.0 * m.tau_J)
-        # V interlaced generators with distinct seeds (§3: different seeds,
-        # working in parallel).
-        rng = mt19937.mt_init(np.arange(V, dtype=np.uint32) * 2654435761 + seed)
-
-        def step(carry, _):
-            state, rng = carry
-            rng, u = _uniform_buffer(rng, rows)
-            state = sweep_lane(
-                state,
-                base_nbr,
-                base_J2,
-                tau_J2,
-                u[:rows],
-                m.beta,
-                m.n,
-                exp_flavor,
-                scalar_updates=(impl == "a3"),
-            )
-            return (state, rng), None
-
-        (state, _), _ = lax.scan(step, (state, rng), None, length=num_sweeps)
-        flat = reorder.from_lane(np.asarray(state.spins), m.n, m.L, V)
-        return flat, state
-
-    raise ValueError(f"unknown impl {impl!r}; choose from {LADDER}")
+    eng = _engine.SweepEngine.build(
+        m, rung=impl, backend="jnp", batch=1, V=V, exp_flavor=exp_flavor
+    )
+    carry = eng.init_carry(seed=seed, spins=np.asarray(spins))
+    carry = eng.run(carry, num_sweeps)
+    return eng.spins_flat(carry)[0], eng.state_of(carry, 0)

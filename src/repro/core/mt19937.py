@@ -129,6 +129,23 @@ def mt_uniform_blocks(state: jax.Array, num_blocks: int):
     return state, u
 
 
+def mt_uniforms_count(state: jax.Array, count: int):
+    """Exactly ``count`` uniforms per lane: ceil(count/624) fresh blocks,
+    tail discarded.
+
+    This is THE draw pattern every sweep/swap consumer uses (engine jnp
+    backend, fused Pallas kernel, tempering swap phase): discarding the
+    tail instead of carrying it over keeps each call's stream position a
+    pure function of (state, count), which is what makes host-side and
+    in-kernel generation bit-exact replayable.
+
+    Returns ``(new_state, uniforms)`` with uniforms shape
+    ``(count,) + state.shape[1:]``.
+    """
+    state, u = mt_uniform_blocks(state, -(-count // N))
+    return state, u[:count]
+
+
 # ----------------------------------------------------------------------------
 # Pure-NumPy scalar reference (the textbook sequential algorithm) used as the
 # oracle in tests; deliberately written in the unvectorized in-place style of

@@ -2,13 +2,22 @@
 
 The paper's production context runs 115 replicas of each Ising model at
 different temperatures and periodically proposes swaps between adjacent
-temperatures.  Here replicas are vmapped over the lane-vectorized sweep and
-swaps exchange *betas* (equivalently, exchange replica labels), the standard
-O(1) formulation.
+temperatures.  Replicas are the engine's batch dimension: each round's
+sweeps run through `SweepEngine.run`, so with ``backend="pallas"`` the
+whole 115-replica sweep phase is a SINGLE fused kernel launch per round
+(in-kernel RNG, multi-sweep grid loop) instead of a Python-level vmap with
+host-side RNG reshuffling; with ``backend="jnp"`` it is one vmapped jit.
+Swaps exchange *betas* (equivalently, exchange replica labels), the
+standard O(1) formulation — spins stay put.
 
 Swap rule for adjacent replicas (a, b):  accept with probability
 ``min(1, exp((beta_a - beta_b) * (E_a - E_b)))`` — computed with the same
 fastexp used for flips, clamped >= 1 for favourable swaps.
+
+Swap randomness: exactly ``ceil(R/2)`` fresh uniforms are drawn per round
+(`draw_swap_uniforms`), one per candidate pair.  The previous scheme
+indexed one 624-entry block modulo 624, which silently reused (and thus
+correlated) pair uniforms whenever R > 2*624.
 """
 
 from __future__ import annotations
@@ -19,9 +28,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
-from repro.core import ising, metropolis, mt19937, reorder
+from repro.core import engine as sweep_engine
+from repro.core import ising, mt19937
 from repro.core.fastexp import EXP_FNS
 
 f32 = jnp.float32
@@ -32,10 +41,43 @@ class PTState(NamedTuple):
     h_space: jax.Array  # (R, rows, V)
     h_tau: jax.Array  # (R, rows, V)
     betas: jax.Array  # (R,) current beta per replica slot
-    rng: jax.Array  # (624, R*V) interlaced generator state
+    rng: jax.Array  # (624, R*V) interlaced generator state (engine layout)
     swap_rng: jax.Array  # (624,) scalar generator for swap decisions
     swap_accept: jax.Array  # () int32 counter
     swap_propose: jax.Array  # () int32 counter
+
+
+def make_pt_engine(
+    m: ising.LayeredModel,
+    num_replicas: int,
+    *,
+    V: int = 4,
+    backend: str = "jnp",
+    exp_flavor: str = "fast",
+    interpret: bool | None = None,
+    replica_tile: int | None = None,
+) -> sweep_engine.SweepEngine:
+    """The batched A.4 engine that owns the sweep phase of every PT round.
+
+    ``backend="pallas"`` forces V to the kernel's 128-lane layout (the
+    model's L must be a multiple of 2*128); ``replica_tile`` sizes the
+    kernel's resident replica group to VMEM (must divide the replica
+    count).
+    """
+    if backend == "pallas":
+        from repro.kernels import ops
+
+        V = ops.LANES
+    return sweep_engine.SweepEngine.build(
+        m,
+        rung="a4",
+        backend=backend,
+        batch=num_replicas,
+        V=V,
+        exp_flavor=exp_flavor,
+        interpret=interpret,
+        replica_tile=replica_tile,
+    )
 
 
 def init_pt(
@@ -44,21 +86,16 @@ def init_pt(
     *,
     V: int = 4,
     seed: int = 0,
+    engine: sweep_engine.SweepEngine | None = None,
 ) -> PTState:
-    R = len(betas)
-    states = []
-    for r in range(R):
-        sp = ising.init_spins(m, seed=seed * 1000 + r)
-        states.append(metropolis.make_lane_state(m, sp, V))
-    stack = lambda xs: jnp.stack(xs)
-    lane_states = [stack([s[i] for s in states]) for i in range(3)]
-    rng = mt19937.mt_init(
-        (np.arange(R * V, dtype=np.uint32) * 2654435761 + seed) & 0xFFFFFFFF
-    )
+    eng = engine or make_pt_engine(m, len(betas), V=V)
+    carry = eng.init_carry(seed=seed, betas=np.asarray(betas, np.float32))
     return PTState(
-        *lane_states,
-        betas=jnp.asarray(betas, f32),
-        rng=rng,
+        carry.spins,
+        carry.h_space,
+        carry.h_tau,
+        carry.betas,
+        carry.rng,
         swap_rng=mt19937.mt_init(seed + 17),
         swap_accept=jnp.int32(0),
         swap_propose=jnp.int32(0),
@@ -88,73 +125,94 @@ def lane_energy(
     return e
 
 
-@functools.partial(
-    jax.jit, static_argnames=("n", "sweeps_per_round", "exp_flavor")
-)
-def pt_round(
+def draw_swap_uniforms(swap_rng: jax.Array, num_replicas: int):
+    """Exactly ``ceil(R/2)`` fresh uniforms, one per candidate swap pair.
+
+    Generates whole 624-entry MT19937 blocks (the generator's granularity)
+    and returns only the first ``ceil(R/2)`` values; the tail is discarded,
+    never reused — so no two pairs in a round can share a uniform.
+    """
+    npairs = (num_replicas + 1) // 2
+    return mt19937.mt_uniforms_count(swap_rng, npairs)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "exp_flavor"))
+def _swap_phase(
     state: PTState,
     base_nbr: jax.Array,
-    base_J2: jax.Array,
-    tau_J2: jax.Array,
+    base_J: jax.Array,  # (n, SD) NOT doubled
+    tau_J: jax.Array,  # (n,)
     h: jax.Array,
     swap_parity: jax.Array,  # 0 or 1: which adjacent pairs are proposed
     n: int,
-    sweeps_per_round: int = 1,
     exp_flavor: str = "fast",
 ) -> PTState:
-    """``sweeps_per_round`` vectorized sweeps on every replica, then one
-    even/odd round of adjacent-temperature swap proposals."""
-    R, rows, V = state.spins.shape
+    """One even/odd round of adjacent-temperature swap proposals."""
+    R = state.betas.shape[0]
     exp_fn = EXP_FNS[exp_flavor]
-
-    # --- sweeps (vmapped over replicas; each replica has its own beta) ---
-    def one_replica(spins, hs, ht, beta, u):
-        st = metropolis.LaneState(spins, hs, ht)
-        st = metropolis.sweep_lane(
-            st, base_nbr, base_J2, tau_J2, u, beta, n, exp_flavor
-        )
-        return st
-
-    rng = state.rng
-    spins, hs, ht = state.spins, state.h_space, state.h_tau
-    for _ in range(sweeps_per_round):
-        rng, u = mt19937.mt_uniform_blocks(rng, -(-rows // mt19937.N))
-        u = u[:rows].reshape(rows, R, V).transpose(1, 0, 2)
-        st = jax.vmap(one_replica)(spins, hs, ht, state.betas, u)
-        spins, hs, ht = st.spins, st.h_space, st.h_tau
-
-    # --- swap phase ---
-    base_J = base_J2 * f32(0.5)
-    tau_J = tau_J2 * f32(0.5)
-    energies = jax.vmap(lambda s: lane_energy(s, h, base_nbr, base_J, tau_J, n))(
-        spins
-    )
-    swap_rng, su = mt19937.mt_uniform_blocks(state.swap_rng, 1)
+    energies = jax.vmap(
+        lambda s: lane_energy(s, h, base_nbr, base_J, tau_J, n)
+    )(state.spins)
+    swap_rng, su = draw_swap_uniforms(state.swap_rng, R)
     # Propose swaps between (i, i+1) for i of the given parity.
     idx = jnp.arange(R)
     is_left = (idx % 2 == swap_parity) & (idx + 1 < R)
-    partner = jnp.where(is_left, idx + 1, jnp.where((idx % 2) != swap_parity, idx - 1, idx))
+    partner = jnp.where(
+        is_left, idx + 1, jnp.where((idx % 2) != swap_parity, idx - 1, idx)
+    )
     partner = jnp.clip(partner, 0, R - 1)
     valid = partner != idx
     d_beta = state.betas - state.betas[partner]
     d_e = energies - energies[partner]
     p_acc = exp_fn(jnp.clip(d_beta * d_e, -20.0, 0.0))  # min(1, exp(.))
-    u_pair = su[idx // 2 % mt19937.N]  # shared uniform per pair
-    u_pair = jnp.where(is_left, u_pair, u_pair[partner])
+    u_pair = su[idx // 2]  # one fresh uniform per pair, no index wrap
+    u_pair = jnp.where(is_left, u_pair, u_pair[partner])  # shared within pair
     accept = valid & (u_pair < p_acc)
     # Betas move between replica slots; spins stay put.
     new_betas = jnp.where(accept, state.betas[partner], state.betas)
     n_acc = jnp.sum(accept.astype(jnp.int32)) // 2
     n_prop = jnp.sum((valid & is_left).astype(jnp.int32))
-    return PTState(
-        spins,
-        hs,
-        ht,
-        new_betas,
-        rng,
-        swap_rng,
-        state.swap_accept + n_acc,
-        state.swap_propose + n_prop,
+    return state._replace(
+        betas=new_betas,
+        swap_rng=swap_rng,
+        swap_accept=state.swap_accept + n_acc,
+        swap_propose=state.swap_propose + n_prop,
+    )
+
+
+def _energy_tables(eng: sweep_engine.SweepEngine):
+    """(base_nbr, base_J, tau_J, h) for energy evaluation — built once with
+    the engine's other model tables, so per-round calls neither re-halve
+    couplings nor re-upload h."""
+    t = eng.tables
+    return t["base_nbr"], t["base_J"], t["tau_J"], t["h"]
+
+
+def pt_round(
+    eng: sweep_engine.SweepEngine,
+    state: PTState,
+    swap_parity,
+    sweeps_per_round: int = 1,
+) -> PTState:
+    """``sweeps_per_round`` engine sweeps on every replica — one batched
+    (kernel) launch — then one even/odd round of swap proposals."""
+    carry = sweep_engine.SweepCarry(
+        state.spins, state.h_space, state.h_tau, state.betas, state.rng
+    )
+    carry = eng.run(carry, sweeps_per_round)
+    state = state._replace(
+        spins=carry.spins, h_space=carry.h_space, h_tau=carry.h_tau, rng=carry.rng
+    )
+    base_nbr, base_J, tau_J, h = _energy_tables(eng)
+    return _swap_phase(
+        state,
+        base_nbr,
+        base_J,
+        tau_J,
+        h,
+        jnp.asarray(swap_parity, jnp.int32),
+        eng.model.n,
+        eng.exp_flavor,
     )
 
 
@@ -167,27 +225,24 @@ def run_parallel_tempering(
     seed: int = 0,
     sweeps_per_round: int = 1,
     exp_flavor: str = "fast",
+    backend: str = "jnp",
+    interpret: bool | None = None,
 ):
-    """Driver: returns (final PTState, per-slot energies)."""
-    state = init_pt(m, betas, V=V, seed=seed)
-    base_nbr = jnp.asarray(m.space_nbr)
-    base_J2 = jnp.asarray(2.0 * m.space_J)
-    tau_J2 = jnp.asarray(2.0 * m.tau_J)
-    h = jnp.asarray(m.h)
+    """Driver: returns (final PTState, per-slot energies).
+
+    ``backend="pallas"`` runs each round's sweep phase as one fused
+    multi-sweep batched kernel launch (V is forced to the 128-lane layout
+    by `make_pt_engine`, so the model needs L % 256 == 0);
+    ``backend="jnp"`` is the vmapped host path.
+    """
+    eng = make_pt_engine(
+        m, len(betas), V=V, backend=backend, exp_flavor=exp_flavor,
+        interpret=interpret,
+    )
+    state = init_pt(m, betas, seed=seed, engine=eng)
     for r in range(num_rounds):
-        state = pt_round(
-            state,
-            base_nbr,
-            base_J2,
-            tau_J2,
-            h,
-            jnp.int32(r % 2),
-            m.n,
-            sweeps_per_round,
-            exp_flavor,
-        )
-    base_J = base_J2 * 0.5
-    tau_J = tau_J2 * 0.5
+        state = pt_round(eng, state, r % 2, sweeps_per_round)
+    base_nbr, base_J, tau_J, h = _energy_tables(eng)
     energies = jax.vmap(
         lambda s: lane_energy(s, h, base_nbr, base_J, tau_J, m.n)
     )(state.spins)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the fully-vectorized Metropolis sweep (paper §3.1/3.2).
+"""Pallas TPU kernels for the fully-vectorized Metropolis sweep (paper §3.1/3.2).
 
 TPU adaptation of the paper's A.4/B.2 rungs: the model's L layers are
 interlaced across the 128 TPU lanes (reorder.py), so one VPU op advances 128
@@ -6,21 +6,39 @@ spins — the CPU version's 4-wide SSE and the GPU version's 32-thread
 coalesced warp both map to the lane dimension here.  Per grid step, one
 replica's full state lives in VMEM:
 
-    spins/h_space/h_tau/uniforms: 4 x rows x 128 x 4 B   (rows = L/128 * n)
+    spins/h_space/h_tau: 3 x rows x 128 x 4 B   (rows = L/128 * n)
+    MT19937 state:       624 x 128 x 4 B = 312 KiB
 
 e.g. the paper's production shape (256 layers x 96 spins, rows=192) uses
-~400 KiB of VMEM — far under the ~16 MiB budget, leaving room to raise the
+~700 KiB of VMEM — far under the ~16 MiB budget, leaving room to raise the
 replica count per core via the batch grid.
 
+Two kernels share one row-sweep body (`_row_sweep`):
+
+* ``metropolis_sweep_kernel``      — the historical single-sweep kernel:
+  uniforms are an *input*, generated host-side (one extra HBM round-trip of
+  rows x 128 floats per sweep, plus one kernel launch per sweep).
+* ``metropolis_multisweep_kernel`` — the fused path: each grid step owns
+  its replica's (624, 128) interlaced MT19937 state block, regenerates the
+  sweep's uniforms in-register (twist -> temper -> 24-bit floats, exactly
+  `core/mt19937.py`'s blocked formulation), and advances ``num_sweeps``
+  full sweeps in a `lax.fori_loop` — one `pallas_call` advances
+  ``num_sweeps x B`` replica-sweeps with zero host round-trips.
+
+The per-sweep uniform stream is bit-identical to the host path: both draw
+ceil(rows/624) fresh 624-row blocks per sweep and discard the tail, so
+jnp-backend and Pallas-backend engines produce bit-exact spins
+(tests/test_engine.py).
+
 The row loop is sequential (Metropolis is a sequential-sweep algorithm; the
-paper vectorizes *within* a visit, not across visits), so the kernel is a
+paper vectorizes *within* a visit, not across visits), so the body is a
 ``fori_loop`` of whole-row VPU ops: masked flips (Figure 10's branch-free
 select), whole-row neighbour updates, and lane-rotated tau wraps for the
 first/last layer blocks (the paper's "special case").
 
 Scalar-bound caveat: neighbour row indices are loaded from VMEM-resident
 tables; a production TPU build would hoist them to SMEM.  Validation is via
-``interpret=True`` on CPU against the pure-jnp oracle in ``ref.py``.
+``interpret=True`` on CPU against the pure-jnp oracles in ``ref.py``.
 """
 
 from __future__ import annotations
@@ -33,12 +51,77 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from repro.core import fastexp as fx
+from repro.core import mt19937 as mt
 
 LANES = 128
 f32 = jnp.float32
 
 
+def _row_sweep(
+    o_spins_ref,  # (bt, rows, 128) — updated in place
+    o_hs_ref,
+    o_ht_ref,
+    u,  # (rows, bt*128) f32 VALUE (not a ref) — uniforms for this sweep
+    nbr_ref,  # (n, SD) int32
+    j2_ref,  # (n, SD) f32 (pre-doubled)
+    tau2_ref,  # (n, 1) f32 (pre-doubled)
+    beta,  # (bt, 1, 1) f32
+    n: int,
+    sd: int,
+    rows: int,
+    bt: int,
+    exp_fn,
+):
+    """One full sweep over a tile of ``bt`` replicas advanced in lockstep.
+
+    Shared by the single-sweep kernel (bt=1 per grid step) and the fused
+    multi-sweep kernel, so the flip/neighbour-update math exists exactly
+    once.  Replica b of the tile owns uniform columns b*128..(b+1)*128.
+    """
+
+    def rmw(ref, row, contrib):
+        idx = (slice(None), pl.ds(row, 1), slice(None))
+        pl.store(ref, idx, pl.load(ref, idx) + contrib)
+
+    def row_step(q, wrap):
+        idx = (slice(None), pl.ds(q, 1), slice(None))
+        s = pl.load(o_spins_ref, idx)  # (bt, 1, 128)
+        hsum = pl.load(o_hs_ref, idx) + pl.load(o_ht_ref, idx)
+        uq = lax.dynamic_slice_in_dim(u, q, 1, axis=0)  # (1, bt*128)
+        uq = uq.reshape(bt, 1, LANES)
+        x = (f32(-2.0) * beta) * s * hsum
+        p = exp_fn(x)
+        mask = (uq < p).astype(f32)  # Figure 10: branch-free vector select
+        smul = s * mask
+        pl.store(o_spins_ref, idx, s * (f32(1.0) - f32(2.0) * mask))
+        i = lax.rem(q, n)
+        base = q - i
+        nbr_row = pl.load(nbr_ref, (pl.ds(i, 1), slice(None)))  # (1, SD)
+        j2_row = pl.load(j2_ref, (pl.ds(i, 1), slice(None)))
+        for d in range(sd):  # static unroll over the sparse degree
+            rmw(o_hs_ref, base + nbr_row[0, d], -smul * j2_row[0, d])
+        tc = -smul * pl.load(tau2_ref, (pl.ds(i, 1), slice(None)))[0, 0]
+        if wrap == -1:  # first layer block: down-link wraps, lane -1
+            rmw(o_ht_ref, rows - n + i, jnp.roll(tc, -1, axis=2))
+            rmw(o_ht_ref, q + n, tc)
+        elif wrap == +1:  # last layer block: up-link wraps, lane +1
+            rmw(o_ht_ref, q - n, tc)
+            rmw(o_ht_ref, i, jnp.roll(tc, 1, axis=2))
+        else:
+            rmw(o_ht_ref, q - n, tc)
+            rmw(o_ht_ref, q + n, tc)
+
+    lax.fori_loop(0, n, lambda q, _: (row_step(q, -1), 0)[1], 0)
+    lax.fori_loop(n, rows - n, lambda q, _: (row_step(q, 0), 0)[1], 0)
+    lax.fori_loop(rows - n, rows, lambda q, _: (row_step(q, +1), 0)[1], 0)
+
+
 def _make_body(n: int, sd: int, rows: int, exp_flavor: str):
+    """Single-sweep body: uniforms arrive as an input ref (host-generated).
+
+    Refs are (1, rows, 128) — one replica per grid step, i.e. the shared
+    row sweep at tile size bt=1.
+    """
     exp_fn = fx.EXP_FNS[exp_flavor]
 
     def body(
@@ -46,10 +129,10 @@ def _make_body(n: int, sd: int, rows: int, exp_flavor: str):
         hs_ref,
         ht_ref,
         u_ref,
-        nbr_ref,  # (n, SD) int32
-        j2_ref,  # (n, SD) f32 (pre-doubled)
-        tau2_ref,  # (n, 1) f32 (pre-doubled)
-        beta_ref,  # (1,) f32 per-replica
+        nbr_ref,
+        j2_ref,
+        tau2_ref,
+        beta_ref,  # (1, 1) f32 per-replica
         o_spins_ref,
         o_hs_ref,
         o_ht_ref,
@@ -58,47 +141,77 @@ def _make_body(n: int, sd: int, rows: int, exp_flavor: str):
         o_spins_ref[...] = spins_ref[...]
         o_hs_ref[...] = hs_ref[...]
         o_ht_ref[...] = ht_ref[...]
-        beta = beta_ref[0]
+        _row_sweep(
+            o_spins_ref, o_hs_ref, o_ht_ref,
+            u_ref[...].reshape(rows, LANES),
+            nbr_ref, j2_ref, tau2_ref,
+            beta_ref[...].reshape(1, 1, 1),
+            n, sd, rows, 1, exp_fn,
+        )
 
-        def rmw(ref, row, contrib):
-            cur = pl.load(ref, (pl.ds(row, 1), slice(None)))
-            pl.store(ref, (pl.ds(row, 1), slice(None)), cur + contrib)
+    return body
 
-        def row_step(q, wrap):
-            s = pl.load(o_spins_ref, (pl.ds(q, 1), slice(None)))  # (1, 128)
-            hsum = pl.load(o_hs_ref, (pl.ds(q, 1), slice(None))) + pl.load(
-                o_ht_ref, (pl.ds(q, 1), slice(None))
+
+def _make_fused_body(
+    n: int,
+    sd: int,
+    rows: int,
+    bt: int,
+    blocks: int,
+    num_sweeps: int,
+    exp_flavor: str,
+):
+    """Fused body: in-kernel MT19937 + ``num_sweeps`` sweeps over a TILE of
+    ``bt`` replicas advanced in lockstep.
+
+    This is the paper's batching insight applied twice: layers fill the 128
+    lanes, and replicas fill an extra leading vector dimension — one twist
+    of the (624, bt*128) generator state and one (bt, 1, 128) row op
+    advance all bt replicas together, instead of looping a grid over
+    replicas (which serialises bt small ops per step).
+
+    ``blocks = ceil(rows / 624)`` fresh generator blocks are drawn per sweep
+    and the tail rows discarded — the exact draw pattern of the host path
+    (`engine._build_jnp`), which is what makes the two backends bit-exact.
+    """
+    exp_fn = fx.EXP_FNS[exp_flavor]
+
+    def body(
+        spins_ref,  # (bt, rows, 128)
+        hs_ref,
+        ht_ref,
+        rng_ref,  # (624, bt*128) uint32 — the tile's interlaced MT19937
+        nbr_ref,  # (n, SD) int32
+        j2_ref,  # (n, SD) f32 (pre-doubled)
+        tau2_ref,  # (n, 1) f32 (pre-doubled)
+        beta_ref,  # (bt, 1) f32
+        o_spins_ref,
+        o_hs_ref,
+        o_ht_ref,
+        o_rng_ref,
+    ):
+        o_spins_ref[...] = spins_ref[...]
+        o_hs_ref[...] = hs_ref[...]
+        o_ht_ref[...] = ht_ref[...]
+        o_rng_ref[...] = rng_ref[...]
+        beta = beta_ref[...].reshape(bt, 1, 1)
+
+        def sweep_step(_k, carry):
+            s_rng = o_rng_ref[...]
+            outs = []
+            for _ in range(blocks):  # static unroll, blocks is tiny
+                s_rng = mt.mt_twist(s_rng)
+                outs.append(mt.mt_temper(s_rng))
+            o_rng_ref[...] = s_rng
+            u32 = outs[0] if blocks == 1 else jnp.concatenate(outs, axis=0)
+            u = mt.uniforms_from_u32(u32)[:rows]  # (rows, bt*128)
+            _row_sweep(
+                o_spins_ref, o_hs_ref, o_ht_ref, u,
+                nbr_ref, j2_ref, tau2_ref, beta, n, sd, rows, bt, exp_fn,
             )
-            u = pl.load(u_ref, (pl.ds(q, 1), slice(None)))
-            x = (f32(-2.0) * beta) * s * hsum
-            p = exp_fn(x)
-            mask = (u < p).astype(f32)  # Figure 10: branch-free vector select
-            smul = s * mask
-            pl.store(
-                o_spins_ref,
-                (pl.ds(q, 1), slice(None)),
-                s * (f32(1.0) - f32(2.0) * mask),
-            )
-            i = lax.rem(q, n)
-            base = q - i
-            nbr_row = pl.load(nbr_ref, (pl.ds(i, 1), slice(None)))  # (1, SD)
-            j2_row = pl.load(j2_ref, (pl.ds(i, 1), slice(None)))
-            for d in range(sd):  # static unroll over the sparse degree
-                rmw(o_hs_ref, base + nbr_row[0, d], -smul * j2_row[0, d])
-            tc = -smul * pl.load(tau2_ref, (pl.ds(i, 1), slice(None)))[0, 0]
-            if wrap == -1:  # first layer block: down-link wraps, lane -1
-                rmw(o_ht_ref, rows - n + i, jnp.roll(tc, -1, axis=1))
-                rmw(o_ht_ref, q + n, tc)
-            elif wrap == +1:  # last layer block: up-link wraps, lane +1
-                rmw(o_ht_ref, q - n, tc)
-                rmw(o_ht_ref, i, jnp.roll(tc, 1, axis=1))
-            else:
-                rmw(o_ht_ref, q - n, tc)
-                rmw(o_ht_ref, q + n, tc)
+            return carry
 
-        lax.fori_loop(0, n, lambda q, _: (row_step(q, -1), 0)[1], 0)
-        lax.fori_loop(n, rows - n, lambda q, _: (row_step(q, 0), 0)[1], 0)
-        lax.fori_loop(rows - n, rows, lambda q, _: (row_step(q, +1), 0)[1], 0)
+        lax.fori_loop(0, num_sweeps, sweep_step, 0)
 
     return body
 
@@ -124,7 +237,7 @@ def metropolis_sweep_kernel(
     assert lanes == LANES, spins.shape
     sd = base_nbr.shape[1]
     body = _make_body(n, sd, rows, exp_flavor)
-    rep_spec = pl.BlockSpec((None, rows, LANES), lambda b: (b, 0, 0))
+    rep_spec = pl.BlockSpec((1, rows, LANES), lambda b: (b, 0, 0))
     shared2d = lambda a: pl.BlockSpec(a.shape, lambda b: (0, 0))
     out = pl.pallas_call(
         body,
@@ -140,9 +253,74 @@ def metropolis_sweep_kernel(
             shared2d(base_nbr),
             shared2d(base_J2),
             shared2d(tau_J2),
-            pl.BlockSpec((None, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
         ],
         out_specs=(rep_spec, rep_spec, rep_spec),
         interpret=interpret,
     )(spins, h_space, h_tau, u, base_nbr, base_J2, tau_J2, beta)
+    return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "num_sweeps", "exp_flavor", "interpret", "replica_tile"),
+)
+def metropolis_multisweep_kernel(
+    spins: jax.Array,  # (B, rows, 128) f32 in {-1,+1}
+    h_space: jax.Array,  # (B, rows, 128)
+    h_tau: jax.Array,  # (B, rows, 128)
+    rng: jax.Array,  # (624, B*128) uint32 interlaced MT19937 state
+    base_nbr: jax.Array,  # (n, SD) int32
+    base_J2: jax.Array,  # (n, SD) f32
+    tau_J2: jax.Array,  # (n, 1) f32
+    beta: jax.Array,  # (B, 1) f32
+    n: int,
+    num_sweeps: int,
+    exp_flavor: str = "fast",
+    interpret: bool = True,
+    replica_tile: int | None = None,
+):
+    """``num_sweeps`` fused sweeps for each of B replicas, RNG in-kernel.
+
+    Returns ``(spins, h_space, h_tau, rng)`` — one `pallas_call`, no
+    host-side uniform buffers, no per-sweep launches.  Replicas advance in
+    lockstep inside the body (batched vector ops), and the grid runs over
+    replica TILES of ``replica_tile`` replicas (default: all B in one tile)
+    so the resident working set can be sized to VMEM without changing the
+    math: tiles are independent, bit-equal to the one-tile case.
+    """
+    B, rows, lanes = spins.shape
+    assert lanes == LANES, spins.shape
+    assert rng.shape == (mt.N, B * LANES), (rng.shape, B)
+    bt = B if replica_tile is None else replica_tile
+    if B % bt != 0:
+        raise ValueError(f"replica_tile {bt} must divide batch {B}")
+    sd = base_nbr.shape[1]
+    blocks = -(-rows // mt.N)  # ceil
+    body = _make_fused_body(n, sd, rows, bt, blocks, num_sweeps, exp_flavor)
+    tile_spec = pl.BlockSpec((bt, rows, LANES), lambda g: (g, 0, 0))
+    rng_spec = pl.BlockSpec((mt.N, bt * LANES), lambda g: (0, g))
+    shared2d = lambda a: pl.BlockSpec(a.shape, lambda g: (0, 0))
+    out = pl.pallas_call(
+        body,
+        out_shape=(
+            jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((mt.N, B * LANES), jnp.uint32),
+        ),
+        grid=(B // bt,),
+        in_specs=[
+            tile_spec,
+            tile_spec,
+            tile_spec,
+            rng_spec,
+            shared2d(base_nbr),
+            shared2d(base_J2),
+            shared2d(tau_J2),
+            pl.BlockSpec((bt, 1), lambda g: (g, 0)),
+        ],
+        out_specs=(tile_spec, tile_spec, tile_spec, rng_spec),
+        interpret=interpret,
+    )(spins, h_space, h_tau, rng, base_nbr, base_J2, tau_J2, beta)
     return out

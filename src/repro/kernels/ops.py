@@ -78,6 +78,46 @@ def metropolis_sweep(
     )
 
 
+def metropolis_multisweep(
+    spins,
+    h_space,
+    h_tau,
+    rng,
+    base_nbr,
+    base_J2,
+    tau_J2,
+    beta,
+    n: int,
+    num_sweeps: int,
+    exp_flavor: str = "fast",
+    interpret=None,
+    replica_tile: int | None = None,
+):
+    """Fused batched sweep: in-kernel MT19937, ``num_sweeps`` sweeps, one
+    launch for all B replicas; see metropolis_kernel.
+
+    ``rng`` is the (624, B*128) interlaced generator state (replica b owns
+    lane columns b*128..(b+1)*128), the engine's canonical layout.
+    Returns (spins, h_space, h_tau, rng).
+    """
+    interpret = _auto_interpret(interpret)
+    return metropolis_kernel.metropolis_multisweep_kernel(
+        spins,
+        h_space,
+        h_tau,
+        rng,
+        base_nbr,
+        base_J2,
+        jnp.reshape(tau_J2, (-1, 1)),
+        jnp.reshape(beta, (-1, 1)),
+        n,
+        num_sweeps,
+        exp_flavor,
+        interpret,
+        replica_tile,
+    )
+
+
 def make_kernel_inputs(m: ising.LayeredModel, batch: int, *, seed: int = 0):
     """Build (spins, hs, ht, u, tables..., beta) kernel inputs for ``batch``
     replicas of model ``m`` with V=128 lane interlacing."""

@@ -43,3 +43,45 @@ def metropolis_sweep_ref(
         return st.spins, st.h_space, st.h_tau
 
     return jax.vmap(one)(spins, h_space, h_tau, u, beta.reshape(-1))
+
+
+def metropolis_multisweep_ref(
+    spins,
+    h_space,
+    h_tau,
+    rng,  # (624, B*V) interlaced MT19937 state
+    base_nbr,
+    base_J2,
+    tau_J2,
+    beta,
+    n,
+    num_sweeps,
+    exp_flavor="fast",
+):
+    """Fused multi-sweep oracle: host-side bulk RNG + vmapped A.4 sweeps.
+
+    Draws ceil(rows/624) fresh generator blocks per sweep and discards the
+    tail — the same stream the fused kernel consumes in-register, so the
+    kernel must match this bit-exactly (including the final rng state).
+    """
+    B, rows, V = spins.shape
+    beta = beta.reshape(-1)
+
+    def one(s, hs, ht, uu, b):
+        st = mp.sweep_lane(
+            mp.LaneState(s, hs, ht),
+            base_nbr,
+            base_J2,
+            tau_J2.reshape(-1),
+            uu,
+            b,
+            n,
+            exp_flavor,
+        )
+        return st.spins, st.h_space, st.h_tau
+
+    for _ in range(num_sweeps):
+        rng, u = mt.mt_uniforms_count(rng, rows)
+        u = u.reshape(rows, B, V).transpose(1, 0, 2)
+        spins, h_space, h_tau = jax.vmap(one)(spins, h_space, h_tau, u, beta)
+    return spins, h_space, h_tau, rng

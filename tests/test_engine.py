@@ -1,0 +1,232 @@
+"""SweepEngine: backend parity (bit-exact), shim regressions, fused kernel.
+
+The load-bearing guarantee: ``backend="jnp"`` and ``backend="pallas"``
+(interpret) produce IDENTICAL bits — spins, effective fields, and final RNG
+state — because both draw the same MT19937 stream (ceil(rows/624) fresh
+blocks per sweep, tail discarded) and evaluate the same flip expression.
+Shapes are chosen to cover every wrap-row case of the lane layout:
+L/V = 2 has ONLY first/last layer blocks (the middle row loop is empty),
+L/V = 3 adds genuine middle rows between the lane-rotated wraps.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, ising, metropolis, mt19937, reorder
+from repro.kernels import ops, ref
+
+LANES = 128
+
+
+def _carry_equal(a, b, msg=""):
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{msg} field={f}",
+        )
+
+
+# -----------------------------------------------------------------------------
+# jnp vs pallas (interpret) bit-exact parity.
+# -----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "L,batch",
+    [
+        (2 * LANES, 1),  # lpv=2: only wrap rows (first/last layer blocks)
+        (3 * LANES, 1),  # lpv=3: wrap rows + middle rows
+        (2 * LANES, 3),  # batched replicas
+        (3 * LANES, 2),
+    ],
+)
+def test_jnp_vs_pallas_bit_exact(L, batch):
+    m = ising.random_layered_model(n=4, L=L, seed=L + batch, beta=0.9)
+    ej = engine.SweepEngine.build(m, rung="a4", backend="jnp", batch=batch, V=LANES)
+    ep = engine.SweepEngine.build(m, rung="a4", backend="pallas", batch=batch, V=LANES)
+    cj, cp = ej.init_carry(seed=3), ep.init_carry(seed=3)
+    _carry_equal(cj, cp, "init")
+    cj, cp = ej.run(cj, 3), ep.run(cp, 3)
+    _carry_equal(cj, cp, "after 3 sweeps")
+    # Second run call continues the same stream on both backends.
+    cj, cp = ej.run(cj, 2), ep.run(cp, 2)
+    _carry_equal(cj, cp, "after 3+2 sweeps")
+
+
+def test_pallas_engine_h_eff_invariant():
+    """Fused multi-sweep kernel keeps incremental fields consistent with a
+    from-scratch recomputation (catches cross-sweep rmw bugs)."""
+    m = ising.random_layered_model(n=5, L=2 * LANES, seed=7, beta=0.8)
+    eng = engine.SweepEngine.build(m, rung="a4", backend="pallas", batch=1, V=LANES)
+    carry = eng.run(eng.init_carry(seed=1), 4)
+    flat = eng.spins_flat(carry)[0]
+    hs_ref, ht_ref = ising.h_eff_from_scratch(m, flat)
+    hs = reorder.from_lane(np.asarray(carry.h_space[0]), m.n, m.L, LANES)
+    ht = reorder.from_lane(np.asarray(carry.h_tau[0]), m.n, m.L, LANES)
+    np.testing.assert_allclose(hs, hs_ref, atol=2e-4)
+    np.testing.assert_allclose(ht, ht_ref, atol=2e-4)
+
+
+# -----------------------------------------------------------------------------
+# Fused multi-sweep kernel vs oracles.
+# -----------------------------------------------------------------------------
+
+
+def test_multisweep_kernel_matches_ref_oracle():
+    m = ising.random_layered_model(n=4, L=3 * LANES, seed=11, beta=1.0)
+    spins, hs, ht, _u, nbr, J2, tau2, beta = ops.make_kernel_inputs(m, batch=2, seed=4)
+    rng = mt19937.mt_init(engine.lane_seeds(2, LANES, 5))
+    out_k = ops.metropolis_multisweep(
+        spins, hs, ht, rng, nbr, J2, tau2, beta, n=m.n, num_sweeps=3
+    )
+    out_r = ref.metropolis_multisweep_ref(
+        spins, hs, ht, rng, nbr, J2, tau2, beta, m.n, 3
+    )
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_multisweep_replica_tiling_bit_equal():
+    """Grid tiling over replica groups (VMEM sizing knob) must not change
+    a single bit vs the one-tile launch."""
+    m = ising.random_layered_model(n=4, L=2 * LANES, seed=8, beta=1.0)
+    spins, hs, ht, _u, nbr, J2, tau2, beta = ops.make_kernel_inputs(m, batch=4, seed=6)
+    rng = mt19937.mt_init(engine.lane_seeds(4, LANES, 3))
+    args = (spins, hs, ht, rng, nbr, J2, tau2, beta)
+    whole = ops.metropolis_multisweep(*args, n=m.n, num_sweeps=2)
+    for tile in (1, 2):
+        tiled = ops.metropolis_multisweep(
+            *args, n=m.n, num_sweeps=2, replica_tile=tile
+        )
+        for a, b in zip(whole, tiled):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="replica_tile"):
+        ops.metropolis_multisweep(*args, n=m.n, num_sweeps=1, replica_tile=3)
+
+
+def test_multisweep_equals_repeated_single_sweeps():
+    """One fused num_sweeps=K launch == K single-sweep launches with
+    host-generated uniforms from the same generator state."""
+    m = ising.random_layered_model(n=4, L=2 * LANES, seed=2, beta=1.2)
+    spins, hs, ht, _u, nbr, J2, tau2, beta = ops.make_kernel_inputs(m, batch=2, seed=1)
+    rng0 = mt19937.mt_init(engine.lane_seeds(2, LANES, 77))
+    fused = ops.metropolis_multisweep(
+        spins, hs, ht, rng0, nbr, J2, tau2, beta, n=m.n, num_sweeps=2
+    )
+    rows = spins.shape[1]
+    blocks = -(-rows // mt19937.N)
+    rng = rng0
+    state = (spins, hs, ht)
+    for _ in range(2):
+        rng, u = mt19937.mt_uniform_blocks(rng, blocks)
+        u = u[:rows].reshape(rows, 2, LANES).transpose(1, 0, 2)
+        state = ops.metropolis_sweep(*state, u, nbr, J2, tau2, beta, n=m.n)
+    for a, b in zip(fused, (*state, rng)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -----------------------------------------------------------------------------
+# Shim regressions: the deprecated drivers must equal the engine path.
+# -----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rung", ["a1", "a2", "a3", "a4"])
+@pytest.mark.parametrize("V", [2, 4])
+def test_run_sweeps_shim_equals_engine(rung, V):
+    m = ising.random_layered_model(n=5, L=4 * V, seed=V, beta=0.8)
+    s0 = ising.init_spins(m, 3)
+    shim_spins, shim_state = metropolis.run_sweeps(m, s0, rung, 2, seed=21, V=V)
+    eng = engine.SweepEngine.build(m, rung=rung, backend="jnp", batch=1, V=V)
+    carry = eng.run(eng.init_carry(seed=21, spins=s0), 2)
+    np.testing.assert_array_equal(shim_spins, eng.spins_flat(carry)[0])
+    _carry_equal(shim_state, eng.state_of(carry, 0), f"rung={rung}")
+
+
+def test_make_sweeper_shim_equals_engine():
+    m = ising.random_layered_model(n=5, L=8, seed=9, beta=1.0)
+    fn, carry = metropolis.make_sweeper(m, "a4", num_sweeps=3, seed=13, V=4)
+    out = fn(carry)
+    eng = engine.SweepEngine.build(m, rung="a4", backend="jnp", batch=1, V=4)
+    c = eng.run(eng.init_carry(seed=13, spins=ising.init_spins(m, 13)), 3)
+    np.testing.assert_array_equal(np.asarray(out.spins), np.asarray(c.spins))
+    np.testing.assert_array_equal(np.asarray(out.rng), np.asarray(c.rng))
+
+
+# -----------------------------------------------------------------------------
+# Engine semantics.
+# -----------------------------------------------------------------------------
+
+
+def test_batched_replicas_are_independent_streams():
+    """Replicas start from different spins AND scrambled RNG seeds; running
+    batched equals running each replica alone (jnp backend, flat rung)."""
+    m = ising.random_layered_model(n=6, L=6, seed=1, beta=1.0)
+    eng = engine.SweepEngine.build(m, rung="a2", backend="jnp", batch=3)
+    carry = eng.run(eng.init_carry(seed=5), 3)
+    batched = eng.spins_flat(carry)
+    assert not np.array_equal(batched[0], batched[1])
+    single = engine.SweepEngine.build(m, rung="a2", backend="jnp", batch=1)
+    for b, lane_seed in enumerate(engine.lane_seeds(3, 1, 5)):
+        c1 = single.init_carry(
+            seed=int(lane_seed), spins=ising.init_spins(m, seed=5 * 1000 + b)
+        )
+        c1 = single.run(c1, 3)
+        np.testing.assert_array_equal(single.spins_flat(c1)[0], batched[b])
+
+
+def test_per_replica_betas_ride_in_carry():
+    m = ising.random_layered_model(n=6, L=8, seed=2, beta=1.0)
+    eng = engine.SweepEngine.build(m, rung="a4", backend="jnp", batch=2, V=4)
+    betas = np.array([0.1, 5.0], np.float32)
+    carry = eng.run(eng.init_carry(seed=0, betas=betas), 10)
+    np.testing.assert_array_equal(np.asarray(carry.betas), betas)
+    e = [ising.energy(m, s) for s in eng.spins_flat(carry)]
+    assert e[1] < e[0]  # cold replica relaxes further
+
+
+def test_build_validation():
+    m = ising.random_layered_model(n=4, L=2 * LANES, seed=0)
+    with pytest.raises(ValueError, match="rung"):
+        engine.SweepEngine.build(m, rung="b9")
+    with pytest.raises(ValueError, match="backend"):
+        engine.SweepEngine.build(m, backend="cuda")
+    with pytest.raises(ValueError, match="pallas"):
+        engine.SweepEngine.build(m, rung="a2", backend="pallas", V=LANES)
+    with pytest.raises(ValueError, match="V=128"):
+        engine.SweepEngine.build(m, rung="a4", backend="pallas", V=4)
+    with pytest.raises(ValueError, match="batch"):
+        engine.SweepEngine.build(m, rung="a2", batch=0)
+    with pytest.raises(ValueError, match="replica_tile"):
+        engine.SweepEngine.build(
+            m, rung="a4", backend="pallas", V=LANES, batch=4, replica_tile=3
+        )
+    with pytest.raises(ValueError, match="replica_tile"):
+        engine.SweepEngine.build(m, rung="a2", replica_tile=1)
+
+
+def test_engine_replica_tile_bit_equal():
+    """The VMEM tiling knob reaches the kernel from the engine and does
+    not change a single bit."""
+    m = ising.random_layered_model(n=4, L=2 * LANES, seed=4, beta=1.0)
+    whole = engine.SweepEngine.build(m, rung="a4", backend="pallas", batch=4, V=LANES)
+    tiled = engine.SweepEngine.build(
+        m, rung="a4", backend="pallas", batch=4, V=LANES, replica_tile=2
+    )
+    cw = whole.run(whole.init_carry(seed=6), 2)
+    ct = tiled.run(tiled.init_carry(seed=6), 2)
+    _carry_equal(cw, ct, "replica_tile=2")
+
+
+def test_register_backend_is_open():
+    """A new backend is a registration, not a fork: wrap jnp under a new name."""
+    engine.register_backend("jnp-alias", engine._build_jnp)
+    try:
+        m = ising.random_layered_model(n=4, L=8, seed=3)
+        e1 = engine.SweepEngine.build(m, rung="a2", backend="jnp-alias")
+        e2 = engine.SweepEngine.build(m, rung="a2", backend="jnp")
+        c1, c2 = e1.run(e1.init_carry(seed=1), 2), e2.run(e2.init_carry(seed=1), 2)
+        _carry_equal(c1, c2, "alias backend")
+        assert "jnp-alias" in engine.backends()
+    finally:
+        engine._BACKENDS.pop("jnp-alias", None)

@@ -54,6 +54,25 @@ def test_kernel_matches_ref(V):
     np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
 
 
+def test_uniforms_kernel_matches_host_pipeline():
+    """Fused in-kernel temper+float conversion == host twist/temper/convert,
+    bit-exact, including the advanced state."""
+    from repro.kernels import mt19937_kernel
+
+    st_ = mt.mt_init(np.arange(256, dtype=np.uint32) * 31 + 5)
+    ns_k, u_k = mt19937_kernel.mt_uniforms_kernel(st_, interpret=True)
+    ns_r, out_r = mt.mt_next_block(st_)
+    np.testing.assert_array_equal(np.asarray(ns_k), np.asarray(ns_r))
+    np.testing.assert_array_equal(
+        np.asarray(u_k), np.asarray(mt.uniforms_from_u32(out_r))
+    )
+    # Multi-block driver: equals mt_uniforms_count's stream.
+    ns2, u2 = mt19937_kernel.mt_uniform_blocks_kernel(st_, 2, interpret=True)
+    ns_h, u_h = mt.mt_uniforms_count(st_, 2 * mt.N)
+    np.testing.assert_array_equal(np.asarray(ns2), np.asarray(ns_h))
+    np.testing.assert_array_equal(np.asarray(u2), np.asarray(u_h))
+
+
 def test_uniforms_in_range():
     st_ = mt.mt_init([7, 8])
     _, u = mt.mt_uniform_blocks(st_, 4)

@@ -43,6 +43,42 @@ def test_pt_cold_replica_reaches_lower_energy():
     assert energies[cold] < energies[hot]
 
 
+def test_swap_uniforms_fresh_and_distinct_per_pair():
+    """ceil(R/2) fresh uniforms per round; no modulo reuse even for
+    R > 2*624 (the old indexing silently correlated those pairs)."""
+    from repro.core import mt19937
+
+    for R in (7, 8, 2000):  # odd, even, and > 2*624 replicas
+        rng = mt19937.mt_init(123)
+        rng2, su = tempering.draw_swap_uniforms(rng, R)
+        assert su.shape == ((R + 1) // 2,)
+        su_np = np.asarray(su)
+        assert np.unique(su_np).size == su_np.size, "pair uniforms must be distinct"
+        # Consecutive rounds draw fresh values (state advanced).
+        _, su_next = tempering.draw_swap_uniforms(rng2, R)
+        assert not np.array_equal(su_np, np.asarray(su_next))
+
+
+def test_pt_round_engine_backends_agree():
+    """One PT round (sweeps + swap bookkeeping) is bit-identical whether
+    the sweep phase runs on the jnp path or the fused Pallas kernel."""
+    m = ising.random_layered_model(n=4, L=256, seed=6, beta=1.0)
+    betas = np.linspace(0.3, 2.0, 4)
+    out = {}
+    for backend in ("jnp", "pallas"):
+        eng = tempering.make_pt_engine(m, len(betas), V=128, backend=backend)
+        state = tempering.init_pt(m, betas, seed=4, engine=eng)
+        for r in range(2):
+            state = tempering.pt_round(eng, state, r % 2, sweeps_per_round=2)
+        out[backend] = state
+    for f in tempering.PTState._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out["jnp"], f)),
+            np.asarray(getattr(out["pallas"], f)),
+            err_msg=f,
+        )
+
+
 def test_tau_coupling_monotonic_in_gamma():
     # Stronger transverse field -> weaker slice coupling.
     js = [qmc.tau_coupling(2.0, g, 32) for g in (0.5, 1.0, 2.0, 4.0)]
