@@ -2,9 +2,31 @@
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_bench_json(name: str, records: list[dict]) -> str:
+    """Write machine-readable bench output to ``BENCH_<name>.json`` at the
+    repo root (gitignored; CI can archive it so the perf trajectory
+    accumulates).  Every record carries at least the shared schema keys
+    ``name``, ``B`` (replica/slot batch), ``sweeps_per_sec`` and
+    ``wall_clock_s``; benches may add extra keys.
+    """
+    for r in records:
+        missing = {"name", "B", "sweeps_per_sec", "wall_clock_s"} - set(r)
+        if missing:
+            raise ValueError(f"bench record {r.get('name')} missing {missing}")
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(records, f, indent=2)
+        f.write("\n")
+    return path
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2):

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import time_fn
+from benchmarks.common import time_fn, write_bench_json
 from repro.configs.ising_qmc import CONFIG as PAPER
 from repro.core import ising, mt19937 as mt
 from repro.core.engine import SweepEngine
@@ -61,6 +61,7 @@ def launch_structure_compare(
 
     m = ising.random_layered_model(n=n, L=L, seed=1, beta=1.0)
     rows_out = []
+    records = []
     for B in batches:
         eng = SweepEngine.build(m, rung="a4", backend="pallas", batch=B, V=LANES)
         carry = eng.init_carry(seed=0)
@@ -94,7 +95,26 @@ def launch_structure_compare(
              "(interpret mode)")
         )
         rows_out.append((f"kernel_persweep_B{B}_us_per_sweep", us_s, ""))
-    return rows_out
+        records.append(
+            {
+                "name": f"kernel_fused_B{B}",
+                "B": B,
+                "sweeps_per_sec": num_sweeps / dt_fused,
+                "wall_clock_s": dt_fused,
+                "speedup_vs_persweep": dt_seed / dt_fused,
+                "mode": "interpret",
+            }
+        )
+        records.append(
+            {
+                "name": f"kernel_persweep_B{B}",
+                "B": B,
+                "sweeps_per_sec": num_sweeps / dt_seed,
+                "wall_clock_s": dt_seed,
+                "mode": "interpret",
+            }
+        )
+    return rows_out, records
 
 
 def run():
@@ -111,7 +131,9 @@ def run():
         ("kernel_vmem_max_replicas_resident", 0.0, f"{max_replicas}")
     )
     # Launch-structure comparison: fused multi-sweep vs seed per-sweep path.
-    rows_out += launch_structure_compare()
+    compare_rows, records = launch_structure_compare()
+    rows_out += compare_rows
+    rows_out.append(("kernel_bench_json", 0.0, write_bench_json("kernel", records)))
     # interpret-mode correctness-path timing (small shape).
     m = ising.random_layered_model(n=4, L=256, seed=1, beta=1.0)
     inputs = ops.make_kernel_inputs(m, batch=1, seed=0)

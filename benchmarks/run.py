@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fastexp       §2.4 + Fig 17 (exp approximation speed and error)
   rng           §3 (interlaced MT19937 throughput)
   kernels       Pallas kernel structural accounting + interpret timings
+  serve         SampleServer packed vs sequential throughput
+                (writes BENCH_serve.json)
   roofline      summary of the dry-run roofline table if present
   smoke         every SweepEngine (rung, backend) combination on a tiny
                 model, correctness-only, <60 s — the CI gate
@@ -26,7 +28,7 @@ def main() -> None:
     if "--smoke" in args:
         args = [a for a in args if a != "--smoke"] + ["smoke"]
     sections = args or [
-        "ladder", "waitprob", "fastexp", "rng", "kernels", "roofline",
+        "ladder", "waitprob", "fastexp", "rng", "kernels", "serve", "roofline",
     ]
     rows = []
     for section in sections:
@@ -52,6 +54,10 @@ def main() -> None:
                 from benchmarks import kernel_bench
 
                 rows += kernel_bench.run()
+            elif section == "serve":
+                from benchmarks import serve_bench
+
+                rows += serve_bench.run()
             elif section == "smoke":
                 from benchmarks import smoke
 

@@ -147,6 +147,8 @@ class SweepEngine:
         self.rows = tables.get("rows")  # lane rungs only
         builder = _BACKENDS[backend]
         self._run_jit = jax.jit(builder(self), static_argnums=(1,))
+        self._splice_jit = None  # built lazily on first splice_slot
+        self._extract_jit = None
 
     # -- construction ---------------------------------------------------------
 
@@ -265,7 +267,15 @@ class SweepEngine:
         return SweepCarry(*stacked, betas=betas, rng=rng)
 
     def run(self, carry: SweepCarry, num_sweeps: int) -> SweepCarry:
-        """Advance every replica by ``num_sweeps`` Metropolis sweeps."""
+        """Advance every replica by ``num_sweeps`` Metropolis sweeps.
+
+        ``num_sweeps`` is a static jit argument: each distinct chunk size
+        compiles once and then hits the persistent compile cache.  The
+        serve scheduler (`repro.serve_mc`) relies on this — it runs the
+        resident batch in fixed-size chunks (with occasional shorter
+        remainder chunks at schedule boundaries), so steady-state serving
+        is one cached fused launch per chunk.
+        """
         return self._run_jit(carry, int(num_sweeps))
 
     def run_fn(self, num_sweeps: int) -> Callable[[SweepCarry], SweepCarry]:
@@ -295,6 +305,124 @@ class SweepEngine:
         """Replica ``b`` as the historical per-replica NamedTuple."""
         cls = metropolis.FlatState if self.rung in FLAT_RUNGS else metropolis.LaneState
         return cls(carry.spins[b], carry.h_space[b], carry.h_tau[b])
+
+    # -- per-slot splice/extract (the serve scheduler's admit/retire API) ------
+    #
+    # A batched carry is a row of independent "slots": slot b owns row b of
+    # spins/h_space/h_tau/betas and its own RNG lane columns (column b for
+    # flat rungs, columns b*V..(b+1)*V for lane rungs).  Because every slot
+    # advances its own MT19937 lanes by the same number of blocks per sweep
+    # regardless of the batch size, a slot's trajectory is a pure function
+    # of its spliced-in state and the sweep count — NOT of its neighbours.
+    # That is the invariant continuous batching rests on: jobs can be
+    # admitted into freed slots mid-flight and still reproduce, bit for
+    # bit, the run they would have had alone (tests/test_serve_mc.py).
+
+    def _slot_lanes(self) -> int:
+        """RNG lane columns owned by one slot."""
+        return self.V if self.rung in LANE_RUNGS else 1
+
+    def init_slot_carry(
+        self,
+        seed: int = 0,
+        spins: np.ndarray | None = None,
+        beta: float | None = None,
+        rng_seeds: np.ndarray | None = None,
+    ) -> SweepCarry:
+        """A single-slot (batch=1 shaped) carry for `splice_slot`.
+
+        Bit-identical to ``init_carry(seed=seed)`` on a ``batch=1`` engine:
+        same spin init (``ising.init_spins(m, seed*1000)``), same scrambled
+        per-lane RNG seeding (``lane_seeds(1, V, seed)``).  ``rng_seeds``
+        overrides the per-lane seeds for callers that need a specific
+        column block of a larger seeding plan (e.g. a tempering job whose
+        replica b must reproduce ``lane_seeds(R, V, seed)[b*V:(b+1)*V]``).
+        """
+        m = self.model
+        if spins is None:
+            spins = ising.init_spins(m, seed=seed * 1000)
+        else:
+            spins = np.asarray(spins, np.float32)
+            if spins.ndim != 1:
+                raise ValueError(f"slot spins must be flat (N,), got {spins.shape}")
+        beta_arr = jnp.full((1,), m.beta if beta is None else beta, f32)
+        lanes = self._slot_lanes()
+        if rng_seeds is None:
+            rng_seeds = lane_seeds(1, lanes, seed)
+        else:
+            rng_seeds = np.asarray(rng_seeds, np.uint32)
+            if rng_seeds.shape != (lanes,):
+                raise ValueError(
+                    f"rng_seeds must have shape ({lanes},), got {rng_seeds.shape}"
+                )
+        if self.rung in FLAT_RUNGS:
+            st = metropolis.make_flat_state(m, spins)
+        else:
+            st = metropolis.make_lane_state(m, spins, self.V)
+        rng = mt.mt_init(rng_seeds)
+        return SweepCarry(
+            st.spins[None], st.h_space[None], st.h_tau[None], beta_arr, rng
+        )
+
+    def splice_slot(
+        self, carry: SweepCarry, b: int, slot: SweepCarry
+    ) -> SweepCarry:
+        """Write a single-slot carry into slot ``b`` of a batched carry.
+
+        One jitted call (slot index traced, so every slot shares the same
+        executable): admission is on the serving fast path, and five
+        separately-dispatched scatters were the dominant admit cost.
+        Pure data movement — bit-exact by construction.
+        """
+        if not 0 <= b < self.batch:
+            raise ValueError(f"slot {b} out of range for batch {self.batch}")
+        if self._splice_jit is None:
+            lanes = self._slot_lanes()
+
+            def _splice(carry, b, slot):
+                upd = lambda dst, src, start, axis: lax.dynamic_update_slice_in_dim(
+                    dst, src, start, axis=axis
+                )
+                return SweepCarry(
+                    upd(carry.spins, slot.spins, b, 0),
+                    upd(carry.h_space, slot.h_space, b, 0),
+                    upd(carry.h_tau, slot.h_tau, b, 0),
+                    upd(carry.betas, slot.betas, b, 0),
+                    upd(carry.rng, slot.rng, b * lanes, 1),
+                )
+
+            self._splice_jit = jax.jit(_splice)
+        return self._splice_jit(carry, jnp.int32(b), slot)
+
+    def extract_slot(self, carry: SweepCarry, b: int) -> SweepCarry:
+        """Slot ``b`` of a batched carry as a single-slot carry (the exact
+        inverse of `splice_slot`; round-trips bit-exactly)."""
+        if not 0 <= b < self.batch:
+            raise ValueError(f"slot {b} out of range for batch {self.batch}")
+        if self._extract_jit is None:
+            lanes = self._slot_lanes()
+
+            def _extract(carry, b):
+                cut = lambda src, start, size, axis: lax.dynamic_slice_in_dim(
+                    src, start, size, axis=axis
+                )
+                return SweepCarry(
+                    cut(carry.spins, b, 1, 0),
+                    cut(carry.h_space, b, 1, 0),
+                    cut(carry.h_tau, b, 1, 0),
+                    cut(carry.betas, b, 1, 0),
+                    cut(carry.rng, b * lanes, lanes, 1),
+                )
+
+            self._extract_jit = jax.jit(_extract)
+        return self._extract_jit(carry, jnp.int32(b))
+
+    def set_slot_betas(self, carry: SweepCarry, slots, betas) -> SweepCarry:
+        """Rewrite the betas of the given slots (anneal-schedule advance,
+        tempering swaps) without touching spins, fields, or RNG."""
+        idx = jnp.asarray(np.asarray(slots, np.int32))
+        vals = jnp.asarray(betas, f32)
+        return carry._replace(betas=carry.betas.at[idx].set(vals))
 
 
 # -----------------------------------------------------------------------------

@@ -41,8 +41,27 @@ TEMPER_B = np.uint32(0x9D2C5680)
 TEMPER_C = np.uint32(0xEFC60000)
 
 
+@jax.jit
+def _mt_init_scan(seeds: jax.Array) -> jax.Array:
+    """Knuth-style seeding as one lax.scan over the 624 rows (the recurrence
+    is sequential in i but vector across lanes).  uint32 wraparound is the
+    algorithm; XLA uint32 arithmetic wraps identically to the NumPy
+    reference, so this is bit-exact (tests/test_mt19937.py KATs)."""
+
+    def step(prev, i):
+        nxt = INIT_MULT * (prev ^ (prev >> np.uint32(30))) + i
+        return nxt, nxt
+
+    _, rest = jax.lax.scan(step, seeds, jnp.arange(1, N, dtype=jnp.uint32))
+    return jnp.concatenate([seeds[None], rest], axis=0)
+
+
 def mt_init(seeds) -> jax.Array:
     """Initialise interlaced state from per-lane seeds.
+
+    Jitted (one compile per lane count, then ~sub-ms per call): the serve
+    scheduler re-seeds a generator block on every job admission, so
+    seeding is on the serving fast path, not just at startup.
 
     Args:
       seeds: scalar or (V,) array-like of uint32 seeds.
@@ -53,14 +72,8 @@ def mt_init(seeds) -> jax.Array:
     scalar = seeds.ndim == 0
     if scalar:
         seeds = seeds[None]
-    v = seeds.shape[0]
-    state = np.empty((N, v), dtype=np.uint32)
-    state[0] = seeds
-    for i in range(1, N):
-        prev = state[i - 1]
-        state[i] = INIT_MULT * (prev ^ (prev >> np.uint32(30))) + np.uint32(i)
-    out = jnp.asarray(state[:, 0] if scalar else state)
-    return out
+    state = _mt_init_scan(jnp.asarray(seeds))
+    return state[:, 0] if scalar else state
 
 
 def _twist_chunk(u: jax.Array, v: jax.Array, m: jax.Array) -> jax.Array:

@@ -18,6 +18,13 @@ Swap randomness: exactly ``ceil(R/2)`` fresh uniforms are drawn per round
 (`draw_swap_uniforms`), one per candidate pair.  The previous scheme
 indexed one 624-entry block modulo 624, which silently reused (and thus
 correlated) pair uniforms whenever R > 2*624.
+
+The pieces are deliberately separable: `swap_phase` (jitted, operates on
+a PTState) and `energy_tables` are public so the serving layer can express
+a whole tempering workload as one multi-slot job — `serve_mc.PTJob` packs
+its R replicas into R slots of the shared resident engine, and a
+tempering round becomes "one scheduled chunk + this swap_phase", sharing
+fused launches with whatever else is resident (see DESIGN.md §Service).
 """
 
 from __future__ import annotations
@@ -137,7 +144,7 @@ def draw_swap_uniforms(swap_rng: jax.Array, num_replicas: int):
 
 
 @functools.partial(jax.jit, static_argnames=("n", "exp_flavor"))
-def _swap_phase(
+def swap_phase(
     state: PTState,
     base_nbr: jax.Array,
     base_J: jax.Array,  # (n, SD) NOT doubled
@@ -180,7 +187,7 @@ def _swap_phase(
     )
 
 
-def _energy_tables(eng: sweep_engine.SweepEngine):
+def energy_tables(eng: sweep_engine.SweepEngine):
     """(base_nbr, base_J, tau_J, h) for energy evaluation — built once with
     the engine's other model tables, so per-round calls neither re-halve
     couplings nor re-upload h."""
@@ -203,8 +210,8 @@ def pt_round(
     state = state._replace(
         spins=carry.spins, h_space=carry.h_space, h_tau=carry.h_tau, rng=carry.rng
     )
-    base_nbr, base_J, tau_J, h = _energy_tables(eng)
-    return _swap_phase(
+    base_nbr, base_J, tau_J, h = energy_tables(eng)
+    return swap_phase(
         state,
         base_nbr,
         base_J,
@@ -242,7 +249,7 @@ def run_parallel_tempering(
     state = init_pt(m, betas, seed=seed, engine=eng)
     for r in range(num_rounds):
         state = pt_round(eng, state, r % 2, sweeps_per_round)
-    base_nbr, base_J, tau_J, h = _energy_tables(eng)
+    base_nbr, base_J, tau_J, h = energy_tables(eng)
     energies = jax.vmap(
         lambda s: lane_energy(s, h, base_nbr, base_J, tau_J, m.n)
     )(state.spins)

@@ -1,0 +1,140 @@
+"""Annealing-as-a-service CLI: a job mix through one resident SampleServer.
+
+The Monte-Carlo sibling of `launch/serve.py`: instead of token slots it
+packs annealing jobs (seed + beta schedule + sweep budget) and parallel-
+tempering jobs (R slots each) into the replica batch of ONE resident
+`SweepEngine`, advancing everyone by fused chunks and retiring/admitting
+between chunks.
+
+  PYTHONPATH=src python -m repro.launch.anneal_serve --smoke
+  PYTHONPATH=src python -m repro.launch.anneal_serve \
+      --jobs 32 --slots 8 --chunk 8 --backend jnp --n 8 --L 16
+
+``--smoke`` is the CI gate: 8 mixed-budget jobs (constants, a ramp, and
+a 3-replica PT job) on a tiny model, < 60 s on CPU.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import ising
+from repro.serve_mc import AnnealJob, PTJob, SampleServer
+
+
+def build_job_mix(args) -> list:
+    """A deterministic mixed workload: mostly constant-beta jobs with
+    scattered budgets, every 4th job an anneal ramp, plus one PT job when
+    ``--pt-replicas`` > 0."""
+    rng = np.random.default_rng(args.seed)
+    jobs = []
+    for i in range(args.jobs):
+        budget = int(rng.integers(args.budget_min, args.budget_max + 1))
+        if i % 4 == 3:
+            steps = max(2, budget // max(1, args.chunk))
+            jobs.append(
+                AnnealJob.ramp(
+                    seed=args.seed * 1000 + i,
+                    beta_start=0.3,
+                    beta_end=float(args.beta),
+                    steps=steps,
+                    sweeps_per_step=max(1, budget // steps),
+                )
+            )
+        else:
+            jobs.append(
+                AnnealJob.constant(
+                    seed=args.seed * 1000 + i,
+                    sweeps=budget,
+                    beta=float(rng.uniform(0.5, 1.5)),
+                )
+            )
+    if args.pt_replicas > 0:
+        betas = np.linspace(0.4, args.beta, args.pt_replicas).astype(np.float32)
+        jobs.append(
+            PTJob(
+                seed=args.seed + 77,
+                betas=betas,
+                num_rounds=args.pt_rounds,
+                sweeps_per_round=max(1, args.chunk // 2),
+            )
+        )
+    return jobs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: 8 mixed jobs incl. ramp + PT, <60s CPU")
+    ap.add_argument("--jobs", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--rung", default="a4")
+    ap.add_argument("--V", type=int, default=4)
+    ap.add_argument("--n", type=int, default=8)
+    ap.add_argument("--L", type=int, default=16)
+    ap.add_argument("--beta", type=float, default=1.2)
+    ap.add_argument("--budget-min", type=int, default=8)
+    ap.add_argument("--budget-max", type=int, default=32)
+    ap.add_argument("--pt-replicas", type=int, default=0)
+    ap.add_argument("--pt-rounds", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        # 7 anneal jobs + 1 three-replica PT job = 8 jobs on 4 slots.
+        args.jobs, args.slots, args.chunk = 7, 4, 4
+        args.n, args.L, args.V = 8, 16, 4
+        args.budget_min, args.budget_max = 4, 24
+        args.pt_replicas, args.pt_rounds = 3, 3
+        args.backend = "jnp"
+
+    model = ising.random_layered_model(
+        n=args.n, L=args.L, seed=args.seed, beta=args.beta
+    )
+    server = SampleServer(
+        model,
+        slots=args.slots,
+        chunk_sweeps=args.chunk,
+        rung=args.rung,
+        backend=args.backend,
+        V=args.V,
+    )
+    jobs = build_job_mix(args)
+    for job in jobs:
+        server.submit(job)
+    print(
+        f"serving {len(jobs)} jobs on {args.slots} slots "
+        f"(chunk={args.chunk} sweeps, backend={args.backend}, "
+        f"model n={args.n} L={args.L})"
+    )
+    t0 = time.perf_counter()
+    results = server.drain()
+    dt = time.perf_counter() - t0
+
+    for r in sorted(results, key=lambda r: r.jid)[:8]:
+        e = r.energy if np.ndim(r.energy) == 0 else float(np.min(r.energy))
+        kind = "pt" if np.ndim(r.spins) == 2 else "anneal"
+        print(
+            f"  job {r.jid:3d} [{kind}] {r.sweeps_done:4d} sweeps in "
+            f"{r.chunks:3d} chunks  E={e:9.2f}  m={np.mean(r.magnetization):+.3f}"
+        )
+    st = server.stats()
+    jobs_per_sec = len(results) / dt
+    flips_per_sec = st["spin_flips"] / dt
+    print(
+        f"served {len(results)} jobs in {dt:.2f}s: {jobs_per_sec:.1f} jobs/s, "
+        f"{st['busy_slot_sweeps'] / dt:.0f} sweeps/s, "
+        f"{flips_per_sec / 1e6:.2f}M spin-flips/s, "
+        f"{st['launches']} launches, utilization {st['utilization']:.0%}"
+    )
+    if len(results) != len(jobs):
+        raise RuntimeError(f"served {len(results)} of {len(jobs)} jobs")
+    return results
+
+
+if __name__ == "__main__":
+    main()

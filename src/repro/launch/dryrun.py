@@ -256,6 +256,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, analyze: bool = True,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        # jax <= 0.4.x returns a per-computation *list* of cost dicts;
+        # newer jax returns one dict.  Normalize to a dict.
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         census = collective_census(hlo)
         row = dict(meta)

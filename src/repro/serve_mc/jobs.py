@@ -1,0 +1,276 @@
+"""Job types the `SampleServer` schedules onto engine slots.
+
+A job is a unit of sampling work that occupies ``num_slots`` slots of the
+server's resident `SweepEngine` batch from admission to retirement.  Its
+lifetime is expressed in *segments*: maximal runs of sweeps during which
+the job's betas are constant and no job-private bookkeeping is needed.
+The scheduler may cut a segment into several fused-launch chunks (chunk
+boundaries never change results — the RNG stream position is a pure
+function of sweeps completed), but it always stops exactly at segment
+boundaries, where the job's ``on_segment`` hook runs:
+
+  * `AnnealJob`   — one slot; a piecewise-constant anneal schedule.  The
+    hook rewrites the slot's beta to the next segment's value.
+  * `PTJob`       — R slots; every segment is one parallel-tempering
+    round.  The hook is `tempering.swap_phase` over the job's own slots
+    (gathered out of the shared carry), so a tempering round is literally
+    "one scheduled chunk + swap" and shares fused launches with whatever
+    else is resident.
+
+Both job types reproduce their standalone counterparts bit for bit: an
+`AnnealJob` equals a solo ``SweepEngine`` run with the same seed and
+schedule, a `PTJob` equals `tempering.run_parallel_tempering` — no matter
+which slots they land in or what runs beside them (tests/test_serve_mc.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as sweep_engine
+from repro.core import ising, mt19937, observables, tempering
+
+
+class JobResult(NamedTuple):
+    """What a retired job hands back to the submitter."""
+
+    jid: int
+    spins: np.ndarray  # (N,) flat layer-major; (R, N) for multi-slot jobs
+    energy: float | np.ndarray
+    magnetization: float | np.ndarray
+    sweeps_done: int
+    chunks: int  # fused launches this job rode in
+    extras: dict
+
+
+class _ScheduledJob:
+    """Segment bookkeeping shared by every job type.
+
+    ``segments`` is a list of positive sweep counts.  The scheduler only
+    ever advances a job by ``k <= remaining_in_segment()`` sweeps.
+    """
+
+    num_slots = 1
+
+    def __init__(self, segments: Sequence[int]):
+        segments = [int(s) for s in segments]
+        if not segments or any(s <= 0 for s in segments):
+            raise ValueError(f"segments must be positive sweep counts: {segments}")
+        self._segments = segments
+        self._seg = 0
+        self._in_seg = 0
+        self.sweeps_done = 0
+        self.chunks = 0
+        self.jid: int | None = None  # assigned by SampleServer.submit
+
+    @property
+    def done(self) -> bool:
+        return self._seg >= len(self._segments)
+
+    @property
+    def segment_index(self) -> int:
+        return self._seg
+
+    def remaining_in_segment(self) -> int:
+        if self.done:
+            return 0
+        return self._segments[self._seg] - self._in_seg
+
+    def total_remaining(self) -> int:
+        return sum(self._segments[self._seg :]) - self._in_seg
+
+    def advance(self, k: int) -> bool:
+        """Record ``k`` sweeps of progress; True iff a segment boundary was
+        reached (the scheduler then runs `on_segment`)."""
+        if k <= 0 or k > self.remaining_in_segment():
+            raise ValueError(
+                f"advance({k}) outside segment (remaining "
+                f"{self.remaining_in_segment()})"
+            )
+        self._in_seg += k
+        self.sweeps_done += k
+        self.chunks += 1
+        if self._in_seg == self._segments[self._seg]:
+            self._seg += 1
+            self._in_seg = 0
+            return True
+        return False
+
+
+class AnnealJob(_ScheduledJob):
+    """One slot, one seed, a piecewise-constant beta schedule.
+
+    ``schedule`` is a list of ``(num_sweeps, beta)`` pairs; ``beta=None``
+    means the model's default.  Single-segment jobs are plain constant-
+    temperature sampling; multi-segment jobs are annealing ladders.
+    """
+
+    def __init__(
+        self,
+        seed: int,
+        schedule: Sequence[tuple[int, float | None]],
+        spins: np.ndarray | None = None,
+    ):
+        super().__init__([s for s, _ in schedule])
+        self.seed = int(seed)
+        self._betas = [b if b is None else float(b) for _, b in schedule]
+        self._init_spins = None if spins is None else np.asarray(spins, np.float32)
+
+    @classmethod
+    def constant(cls, seed: int, sweeps: int, beta: float | None = None):
+        return cls(seed, [(sweeps, beta)])
+
+    @classmethod
+    def ramp(
+        cls,
+        seed: int,
+        beta_start: float,
+        beta_end: float,
+        steps: int,
+        sweeps_per_step: int,
+    ):
+        """Linear beta ramp: ``steps`` segments of ``sweeps_per_step``."""
+        betas = np.linspace(beta_start, beta_end, steps)
+        return cls(seed, [(sweeps_per_step, float(b)) for b in betas])
+
+    def _beta(self, server, seg: int) -> float:
+        b = self._betas[seg]
+        return float(server.engine.model.beta) if b is None else b
+
+    def current_beta(self, server) -> float:
+        return self._beta(server, self._seg)
+
+    # -- scheduler interface --------------------------------------------------
+
+    def init_carries(self, server) -> list[sweep_engine.SweepCarry]:
+        return [
+            server.engine.init_slot_carry(
+                seed=self.seed,
+                spins=self._init_spins,
+                beta=self._beta(server, 0),
+            )
+        ]
+
+    def on_segment(self, server, carry, slots):
+        if self.done:
+            return carry
+        return server.engine.set_slot_betas(
+            carry, slots, [self.current_beta(server)]
+        )
+
+    def finalize(self, server, slots) -> JobResult:
+        eng, m = server.engine, server.engine.model
+        sub = eng.extract_slot(server.carry, slots[0])
+        spins = eng.spins_flat(sub)[0]
+        return JobResult(
+            jid=self.jid,
+            spins=spins,
+            energy=observables.energies(m, spins),
+            magnetization=observables.magnetization(spins),
+            sweeps_done=self.sweeps_done,
+            chunks=self.chunks,
+            extras={"final_beta": float(np.asarray(sub.betas)[0])},
+        )
+
+
+class PTJob(_ScheduledJob):
+    """A whole parallel-tempering workload as ONE multi-slot job.
+
+    Occupies R slots (one per replica).  Every segment is one PT round of
+    ``sweeps_per_round`` sweeps; at each boundary the job gathers its
+    slots into a `tempering.PTState` and runs the same jitted
+    `tempering.swap_phase` the standalone driver uses, then scatters the
+    swapped betas back into the shared carry.  Seeding reproduces
+    `tempering.init_pt` exactly (replica b gets RNG lane seeds
+    ``lane_seeds(R, V, seed)[b*V:(b+1)*V]`` and spins
+    ``init_spins(m, seed*1000 + b)``), so the result is bit-identical to
+    `tempering.run_parallel_tempering` regardless of slot placement.
+    """
+
+    def __init__(
+        self,
+        seed: int,
+        betas: np.ndarray,
+        num_rounds: int,
+        sweeps_per_round: int = 1,
+    ):
+        if num_rounds < 1:
+            raise ValueError(f"num_rounds must be >= 1, got {num_rounds}")
+        super().__init__([int(sweeps_per_round)] * int(num_rounds))
+        self.seed = int(seed)
+        self.betas = np.asarray(betas, np.float32)
+        self.num_slots = len(self.betas)
+        self.swap_rng = mt19937.mt_init(self.seed + 17)  # as tempering.init_pt
+        self.swap_accept = jnp.int32(0)
+        self.swap_propose = jnp.int32(0)
+
+    # -- scheduler interface --------------------------------------------------
+
+    def init_carries(self, server) -> list[sweep_engine.SweepCarry]:
+        eng, m = server.engine, server.engine.model
+        lanes = eng._slot_lanes()
+        seeds = sweep_engine.lane_seeds(self.num_slots, lanes, self.seed)
+        return [
+            eng.init_slot_carry(
+                seed=self.seed,
+                spins=ising.init_spins(m, seed=self.seed * 1000 + b),
+                beta=float(self.betas[b]),
+                rng_seeds=seeds[b * lanes : (b + 1) * lanes],
+            )
+            for b in range(self.num_slots)
+        ]
+
+    def _gather_state(self, eng, carry, slots) -> tempering.PTState:
+        idx = np.asarray(slots, np.int64)
+        lanes = eng._slot_lanes()
+        cols = np.concatenate([np.arange(b * lanes, (b + 1) * lanes) for b in idx])
+        return tempering.PTState(
+            carry.spins[idx],
+            carry.h_space[idx],
+            carry.h_tau[idx],
+            carry.betas[idx],
+            carry.rng[:, cols],
+            swap_rng=self.swap_rng,
+            swap_accept=self.swap_accept,
+            swap_propose=self.swap_propose,
+        )
+
+    def on_segment(self, server, carry, slots):
+        eng = server.engine
+        state = self._gather_state(eng, carry, slots)
+        parity = (self._seg - 1) % 2  # round index just completed, as the
+        # standalone driver's ``r % 2``
+        state = tempering.swap_phase(
+            state,
+            *tempering.energy_tables(eng),
+            jnp.asarray(parity, jnp.int32),
+            eng.model.n,
+            eng.exp_flavor,
+        )
+        self.swap_rng = state.swap_rng
+        self.swap_accept = state.swap_accept
+        self.swap_propose = state.swap_propose
+        return eng.set_slot_betas(carry, slots, state.betas)
+
+    def finalize(self, server, slots) -> JobResult:
+        eng, m = server.engine, server.engine.model
+        spins = np.stack(
+            [eng.spins_flat(eng.extract_slot(server.carry, b))[0] for b in slots]
+        )
+        betas = np.asarray(server.carry.betas)[np.asarray(slots)]
+        return JobResult(
+            jid=self.jid,
+            spins=spins,
+            energy=observables.energies(m, spins),
+            magnetization=observables.magnetization(spins),
+            sweeps_done=self.sweeps_done,
+            chunks=self.chunks,
+            extras={
+                "betas": betas,
+                "swap_accept": int(self.swap_accept),
+                "swap_propose": int(self.swap_propose),
+            },
+        )

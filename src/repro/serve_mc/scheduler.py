@@ -1,0 +1,187 @@
+"""SampleServer — continuous-batching annealing service over one SweepEngine.
+
+The serving analogue of `launch/serve.py`'s token loop, with replica
+slots in place of sequence slots: ONE resident `SweepEngine` of ``slots``
+replicas stays alive for the server's lifetime, and every scheduling
+round advances the whole batch by a fixed-size chunk of sweeps as a
+single launch (for ``backend="pallas"`` one fused kernel launch — the
+many-replica throughput play of Weigel & Yavors'kii, arXiv:1107.5463,
+applied to user jobs).  Between chunks the scheduler does the bookkeeping
+the GPU/TPU never sees:
+
+  admit    pop FIFO jobs while their ``num_slots`` fit in the free list;
+           splice each job's initial per-slot carry (spins, fields, beta,
+           RNG lane columns) into its slots (`SweepEngine.splice_slot`).
+  chunk    ``min(chunk_sweeps, min remaining-in-segment over active
+           jobs)`` — chunks never cross a segment boundary, so per-job
+           beta schedules and tempering swap points land exactly where a
+           solo run would put them.
+  hooks    jobs whose segment ended run `on_segment` (anneal jobs rewrite
+           their slot's beta; PT jobs run the swap phase over their
+           slots).
+  retire   finished jobs are finalized (`core/observables.py` summary of
+           the extracted slot), their slots returned to the free list.
+
+Determinism contract: a job's final spins/energy/RNG are bit-identical
+whether it ran solo (``slots=1``) or packed with arbitrary neighbours
+across admit/retire slot reuse, because (a) each slot owns private RNG
+lane columns that advance by a fixed number of blocks per sweep
+regardless of batch size, (b) chunk boundaries never change the stream
+position (it is a pure function of sweeps completed), and (c) chunks stop
+at segment boundaries.  Idle slots keep sweeping whatever they last held
+— wasted work, not wrong work; utilization is reported in `stats()`.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import List
+
+from repro.core import ising
+from repro.core.engine import SweepEngine
+
+from repro.serve_mc.jobs import JobResult
+
+
+class SampleServer:
+    """Schedules a FIFO queue of jobs onto the batch dim of one engine."""
+
+    def __init__(
+        self,
+        model: ising.LayeredModel,
+        *,
+        slots: int = 8,
+        chunk_sweeps: int = 8,
+        rung: str = "a4",
+        backend: str = "jnp",
+        V: int = 4,
+        exp_flavor: str | None = None,
+        interpret: bool | None = None,
+        replica_tile: int | None = None,
+        idle_seed: int = 0,
+    ):
+        if chunk_sweeps < 1:
+            raise ValueError(f"chunk_sweeps must be >= 1, got {chunk_sweeps}")
+        if backend == "pallas":
+            from repro.kernels import ops  # deferred: kernels are optional
+
+            V = ops.LANES
+        self.engine = SweepEngine.build(
+            model,
+            rung=rung,
+            backend=backend,
+            batch=slots,
+            V=V,
+            exp_flavor=exp_flavor,
+            interpret=interpret,
+            replica_tile=replica_tile,
+        )
+        # Idle slots hold (and keep sweeping) this placeholder state until
+        # a job is spliced over it.
+        self.carry = self.engine.init_carry(seed=idle_seed)
+        self.chunk_sweeps = int(chunk_sweeps)
+        self._queue: deque = deque()
+        self._active: dict[int, tuple] = {}  # jid -> (job, slots tuple)
+        self._free: list[int] = list(range(slots))
+        self._next_jid = 0
+        # Counters for throughput reporting.
+        self.launches = 0
+        self.busy_slot_sweeps = 0
+        self.total_slot_sweeps = 0
+
+    # -- submission -----------------------------------------------------------
+
+    @property
+    def slots(self) -> int:
+        return self.engine.batch
+
+    @property
+    def num_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def num_queued(self) -> int:
+        return len(self._queue)
+
+    def submit(self, job) -> int:
+        """Enqueue a job; returns its assigned job id."""
+        if job.num_slots > self.slots:
+            raise ValueError(
+                f"job needs {job.num_slots} slots, server has {self.slots}"
+            )
+        if job.jid is not None:
+            raise ValueError(f"job already submitted (jid={job.jid})")
+        job.jid = self._next_jid
+        self._next_jid += 1
+        self._queue.append(job)
+        return job.jid
+
+    # -- scheduling -----------------------------------------------------------
+
+    def _admit(self) -> None:
+        """FIFO admission: fill free slots from the queue head.  Plain FIFO
+        has head-of-line blocking for wide (multi-slot) jobs; priority
+        admission is a ROADMAP follow-on."""
+        while self._queue and self._queue[0].num_slots <= len(self._free):
+            job = self._queue.popleft()
+            self._free.sort()
+            taken = tuple(self._free[: job.num_slots])
+            del self._free[: job.num_slots]
+            for b, slot_carry in zip(taken, job.init_carries(self)):
+                self.carry = self.engine.splice_slot(self.carry, b, slot_carry)
+            self._active[job.jid] = (job, taken)
+
+    def step(self) -> List[JobResult]:
+        """One scheduling round: admit, one chunked launch, hooks, retire.
+
+        Returns the jobs that retired this round (possibly empty).
+        """
+        self._admit()
+        if not self._active:
+            return []
+        chunk = min(
+            self.chunk_sweeps,
+            min(j.remaining_in_segment() for j, _ in self._active.values()),
+        )
+        self.carry = self.engine.run(self.carry, chunk)
+        self.launches += 1
+        busy = sum(j.num_slots for j, _ in self._active.values())
+        self.busy_slot_sweeps += chunk * busy
+        self.total_slot_sweeps += chunk * self.slots
+        completed: List[JobResult] = []
+        for jid in list(self._active):
+            job, taken = self._active[jid]
+            if job.advance(chunk):
+                self.carry = job.on_segment(self, self.carry, taken)
+                if job.done:
+                    completed.append(job.finalize(self, taken))
+                    self._free.extend(taken)
+                    del self._active[jid]
+        return completed
+
+    def drain(self, max_steps: int = 1_000_000) -> List[JobResult]:
+        """Run scheduling rounds until queue and slots are empty."""
+        results: List[JobResult] = []
+        for _ in range(max_steps):
+            if not self._queue and not self._active:
+                return results
+            results.extend(self.step())
+        raise RuntimeError(f"drain did not converge in {max_steps} steps")
+
+    # -- reporting ------------------------------------------------------------
+
+    def stats(self) -> dict:
+        n = self.engine.model.num_spins
+        return {
+            "slots": self.slots,
+            "launches": self.launches,
+            "busy_slot_sweeps": self.busy_slot_sweeps,
+            "total_slot_sweeps": self.total_slot_sweeps,
+            "utilization": (
+                self.busy_slot_sweeps / self.total_slot_sweeps
+                if self.total_slot_sweeps
+                else 0.0
+            ),
+            # One attempted Metropolis update per spin per sweep.
+            "spin_flips": self.busy_slot_sweeps * n,
+        }

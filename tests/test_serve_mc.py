@@ -1,0 +1,222 @@
+"""SampleServer: scheduler determinism, anneal schedules, PT-as-a-job.
+
+The load-bearing guarantee (DESIGN.md §Service): a job's final spins,
+energy, and RNG state are bit-identical whether it ran solo (slots=1) or
+packed with arbitrary neighbours, across admit/retire slot reuse and
+regardless of chunk size — because slots own private RNG lane columns and
+chunks never cross segment boundaries.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import engine, ising, observables, reorder, tempering
+from repro.serve_mc import AnnealJob, PTJob, SampleServer
+
+MODEL = ising.random_layered_model(n=5, L=8, seed=1, beta=1.0)
+MIXED = [(10, 3), (11, 7), (12, 5), (13, 4), (14, 9)]  # (seed, budget)
+
+
+def _server(m=MODEL, **kw):
+    kw.setdefault("rung", "a4")
+    kw.setdefault("backend", "jnp")
+    kw.setdefault("V", 4)
+    return SampleServer(m, **kw)
+
+
+# -----------------------------------------------------------------------------
+# Scheduler determinism: solo == packed, bit for bit.
+# -----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("slots,chunk", [(2, 4), (3, 2), (5, 8)])
+def test_solo_equals_packed_across_slot_reuse(slots, chunk):
+    """5 mixed-budget jobs through a small server: retire/admit reuses
+    slots mid-flight, chunk sizes differ between the two runs, results
+    must not change by a single bit."""
+    packed = _server(slots=slots, chunk_sweeps=chunk)
+    jobs = [AnnealJob.constant(seed=s, sweeps=b, beta=1.0) for s, b in MIXED]
+    for j in jobs:
+        packed.submit(j)
+    by_jid = {r.jid: r for r in packed.drain()}
+    assert sorted(by_jid) == [j.jid for j in jobs]
+    for (s, b), job in zip(MIXED, jobs):
+        solo = _server(slots=1, chunk_sweeps=5)  # different chunking on purpose
+        solo.submit(AnnealJob.constant(seed=s, sweeps=b, beta=1.0))
+        (r_solo,) = solo.drain()
+        r_packed = by_jid[job.jid]
+        np.testing.assert_array_equal(r_solo.spins, r_packed.spins)
+        assert r_solo.energy == r_packed.energy
+        assert r_solo.sweeps_done == r_packed.sweeps_done == b
+
+
+def test_served_job_equals_raw_engine_run():
+    """A constant-beta job is exactly a solo SweepEngine run of the same
+    seed/budget (the server adds scheduling, not physics)."""
+    srv = _server(slots=2, chunk_sweeps=3)
+    srv.submit(AnnealJob.constant(seed=11, sweeps=7))  # beta=None -> model beta
+    srv.submit(AnnealJob.constant(seed=23, sweeps=4, beta=0.7))
+    res = {r.jid: r for r in srv.drain()}
+    eng = engine.SweepEngine.build(MODEL, rung="a4", backend="jnp", batch=1, V=4)
+    carry = eng.run(eng.init_carry(seed=11), 7)
+    np.testing.assert_array_equal(res[0].spins, eng.spins_flat(carry)[0])
+    assert res[0].energy == ising.energy(MODEL, eng.spins_flat(carry)[0])
+
+
+def test_rng_stream_independent_of_neighbours():
+    """The retired slot's RNG columns equal the solo run's generator state
+    — per-slot streams advance the same regardless of batch packing."""
+    packed = _server(slots=3, chunk_sweeps=2)
+    job = AnnealJob.constant(seed=7, sweeps=4, beta=1.1)
+    packed.submit(job)
+    packed.submit(AnnealJob.constant(seed=8, sweeps=6, beta=0.5))
+    packed.step()  # job still active after 2 of 4 sweeps
+    sub = packed.engine.extract_slot(packed.carry, 0)
+    solo = _server(slots=1, chunk_sweeps=2)
+    solo.submit(AnnealJob.constant(seed=7, sweeps=4, beta=1.1))
+    solo.step()
+    np.testing.assert_array_equal(np.asarray(sub.rng), np.asarray(solo.carry.rng))
+
+
+# -----------------------------------------------------------------------------
+# Anneal schedules.
+# -----------------------------------------------------------------------------
+
+
+def test_anneal_schedule_rewrites_betas_between_chunks():
+    """A two-segment schedule equals a manual run that rewrites betas at
+    the segment boundary — even when chunks subdivide the segments."""
+    sched = [(5, 0.3), (4, 1.5)]
+    srv = _server(slots=2, chunk_sweeps=2)  # 5 = 2+2+1: misaligned chunks
+    srv.submit(AnnealJob(seed=4, schedule=sched))
+    srv.submit(AnnealJob.constant(seed=41, sweeps=3, beta=1.0))  # neighbour
+    res = {r.jid: r for r in srv.drain()}
+    eng = engine.SweepEngine.build(MODEL, rung="a4", backend="jnp", batch=1, V=4)
+    carry = eng.init_carry(seed=4, betas=np.array([0.3], np.float32))
+    carry = eng.run(carry, 5)
+    carry = carry._replace(betas=np.array([1.5], np.float32))
+    carry = eng.run(carry, 4)
+    np.testing.assert_array_equal(res[0].spins, eng.spins_flat(carry)[0])
+    assert res[0].extras["final_beta"] == np.float32(1.5)
+    assert res[0].sweeps_done == 9
+
+
+def test_ramp_constructor():
+    job = AnnealJob.ramp(seed=0, beta_start=0.2, beta_end=1.0, steps=5,
+                         sweeps_per_step=2)
+    assert job.total_remaining() == 10
+    assert [round(b, 2) for b in job._betas] == [0.2, 0.4, 0.6, 0.8, 1.0]
+
+
+# -----------------------------------------------------------------------------
+# Parallel tempering as a multi-slot job.
+# -----------------------------------------------------------------------------
+
+
+def test_pt_job_equals_standalone_driver():
+    """A PTJob packed beside an anneal job whose segments do NOT align
+    with PT rounds (rounds get split across chunks) must still reproduce
+    tempering.run_parallel_tempering bit for bit."""
+    m = ising.random_layered_model(n=4, L=8, seed=2, beta=1.0)
+    betas = np.linspace(0.4, 1.4, 4).astype(np.float32)
+    rounds, spr = 3, 2
+    state, energies = tempering.run_parallel_tempering(
+        m, betas, rounds, V=4, seed=5, sweeps_per_round=spr, backend="jnp"
+    )
+    solo_spins = np.stack(
+        [reorder.from_lane(np.asarray(s), m.n, m.L, 4) for s in state.spins]
+    )
+    srv = SampleServer(m, slots=6, chunk_sweeps=4, rung="a4", backend="jnp", V=4)
+    # Budget 5 forces chunk sizes 2,2,1,... -> PT rounds split mid-round.
+    srv.submit(AnnealJob.constant(seed=99, sweeps=5, beta=0.8))
+    pt = PTJob(seed=5, betas=betas, num_rounds=rounds, sweeps_per_round=spr)
+    srv.submit(pt)
+    res = {r.jid: r for r in srv.drain()}
+    r = res[pt.jid]
+    np.testing.assert_array_equal(r.spins, solo_spins)
+    np.testing.assert_array_equal(r.extras["betas"], np.asarray(state.betas))
+    np.testing.assert_allclose(r.energy, energies, rtol=1e-5)
+    assert r.extras["swap_propose"] == int(state.swap_propose)
+    assert r.extras["swap_accept"] == int(state.swap_accept)
+
+
+def test_pt_job_waits_for_enough_free_slots():
+    """FIFO admission: a 3-slot PT job queues until 3 slots free up."""
+    m = ising.random_layered_model(n=4, L=8, seed=3, beta=1.0)
+    srv = SampleServer(m, slots=3, chunk_sweeps=2, rung="a4", backend="jnp", V=4)
+    srv.submit(AnnealJob.constant(seed=1, sweeps=2, beta=1.0))
+    pt = PTJob(seed=9, betas=np.array([0.5, 1.0, 1.5], np.float32), num_rounds=2)
+    srv.submit(pt)
+    srv.step()  # anneal job runs alone; PT blocked (needs 3 slots, 2 free)
+    assert srv.num_active == 0 or pt.jid not in srv._active
+    results = srv.drain()
+    assert {r.jid for r in results} >= {pt.jid}
+
+
+# -----------------------------------------------------------------------------
+# Backend parity: the scheduler is backend-agnostic.
+# -----------------------------------------------------------------------------
+
+
+def test_serve_pallas_equals_jnp():
+    """Same job set on a pallas(interpret) server and a jnp server:
+    bit-identical results (the engine's backend parity survives the
+    scheduler's splice/extract path)."""
+    m = ising.random_layered_model(n=2, L=256, seed=4, beta=1.0)
+    specs = [(5, 3, 1.0), (6, 5, 0.8)]
+
+    def run(backend):
+        srv = SampleServer(m, slots=2, chunk_sweeps=2, backend=backend,
+                           V=128, interpret=True if backend == "pallas" else None)
+        for s, b, beta in specs:
+            srv.submit(AnnealJob.constant(seed=s, sweeps=b, beta=beta))
+        return srv.drain()
+
+    for rj, rp in zip(run("jnp"), run("pallas")):
+        np.testing.assert_array_equal(rj.spins, rp.spins)
+        assert rj.energy == rp.energy
+
+
+# -----------------------------------------------------------------------------
+# Observables.
+# -----------------------------------------------------------------------------
+
+
+def test_observables_match_ising_energy():
+    rng = np.random.default_rng(0)
+    spins = np.where(rng.random((3, MODEL.num_spins)) < 0.5, -1.0, 1.0)
+    e = observables.energies(MODEL, spins)
+    assert e.shape == (3,)
+    for b in range(3):
+        assert e[b] == ising.energy(MODEL, spins[b])
+    mag = observables.magnetization(spins)
+    np.testing.assert_allclose(mag, spins.mean(axis=1))
+    s = observables.summarize(MODEL, spins[0])
+    assert s.energy == e[0] and s.magnetization == mag[0]
+    alm = observables.abs_layer_magnetization(MODEL, spins)
+    assert alm.shape == (3,) and (alm >= np.abs(mag) - 1e-12).all()
+
+
+def test_submit_validation():
+    srv = _server(slots=2, chunk_sweeps=2)
+    with pytest.raises(ValueError, match="slots"):
+        srv.submit(PTJob(seed=0, betas=np.ones(3, np.float32), num_rounds=1))
+    job = AnnealJob.constant(seed=0, sweeps=1)
+    srv.submit(job)
+    with pytest.raises(ValueError, match="submitted"):
+        srv.submit(job)
+    with pytest.raises(ValueError, match="segments"):
+        AnnealJob(seed=0, schedule=[(0, 1.0)])
+    with pytest.raises(ValueError, match="chunk_sweeps"):
+        _server(slots=1, chunk_sweeps=0)
+
+
+def test_stats_track_utilization():
+    srv = _server(slots=4, chunk_sweeps=2)
+    srv.submit(AnnealJob.constant(seed=0, sweeps=4, beta=1.0))
+    srv.drain()
+    st = srv.stats()
+    assert st["busy_slot_sweeps"] == 4
+    assert st["total_slot_sweeps"] == 16  # 3 idle slots swept alongside
+    assert st["utilization"] == 0.25
+    assert st["spin_flips"] == 4 * MODEL.num_spins
