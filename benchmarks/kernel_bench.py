@@ -18,6 +18,11 @@ B in {1, 8, 115} (115 = the paper's production replica count):
                    into the kernel body (no host round-trips).
 
 Reported as us/sweep (whole batch advanced one sweep).
+
+`colored_vs_sequential` is the sweep-ORDER comparison at the paper's
+production shape: the graph-colored "cb" rung (C ~ 4 whole-lattice vector
+updates per sweep) vs the sequential a4 rung (rows serial row steps per
+sweep), on both backends, written to BENCH_kernel.json.
 """
 
 from __future__ import annotations
@@ -117,6 +122,56 @@ def launch_structure_compare(
     return rows_out, records
 
 
+def colored_vs_sequential(B: int = 8, num_sweeps: int = 2):
+    """The colored-rung headline: "cb" vs "a4" at the PAPER production
+    shape (96 spins x 256 layers -> rows=192), both backends, B replicas.
+
+    The sequential a4 sweep is `rows` serial row steps per sweep however
+    wide the hardware is; the colored sweep is C ~ 4 whole-lattice vector
+    updates.  Interpret-mode wall clock exaggerates a4's per-op dispatch
+    cost, but the structural point — O(rows) serial steps vs O(C) vector
+    steps — is exactly what a real TPU build hits as well.
+    """
+    m = ising.random_layered_model(
+        n=PAPER.spins_per_layer, L=PAPER.num_layers, seed=1, beta=1.0
+    )
+    rows_out, records = [], []
+    sweeps_per_sec = {}
+    for backend in ("pallas", "jnp"):
+        for rung in ("a4", "cb"):
+            eng = SweepEngine.build(m, rung=rung, backend=backend, batch=B, V=LANES)
+            carry = eng.init_carry(seed=0)
+            dt, _ = time_fn(eng.run_fn(num_sweeps), carry, iters=3, warmup=1)
+            sps = num_sweeps / dt
+            sweeps_per_sec[(rung, backend)] = sps
+            name = f"kernel_{rung}_{backend}_paper_B{B}"
+            rows_out.append(
+                (f"{name}_us_per_sweep", dt / num_sweeps * 1e6,
+                 f"{sps:.1f} sweeps/s (interpret mode)" if backend == "pallas"
+                 else f"{sps:.1f} sweeps/s")
+            )
+            records.append(
+                {
+                    "name": name,
+                    "B": B,
+                    "sweeps_per_sec": sps,
+                    "wall_clock_s": dt,
+                    "rung": rung,
+                    "backend": backend,
+                    "mode": "interpret" if backend == "pallas" else "jnp",
+                }
+            )
+    for backend in ("pallas", "jnp"):
+        speedup = sweeps_per_sec[("cb", backend)] / sweeps_per_sec[("a4", backend)]
+        rows_out.append(
+            (f"kernel_cb_vs_a4_{backend}_paper_speedup", speedup, f"{speedup:.1f}x")
+        )
+        for r in records:
+            if r["rung"] == "cb" and r["backend"] == backend:
+                r["speedup_vs_a4"] = speedup
+    return rows_out, records
+
+
 def run():
     rows_out = []
     # Paper production shape: 256 layers x 96 spins.
@@ -133,6 +188,10 @@ def run():
     # Launch-structure comparison: fused multi-sweep vs seed per-sweep path.
     compare_rows, records = launch_structure_compare()
     rows_out += compare_rows
+    # Colored-vs-sequential sweep order at the paper production shape.
+    colored_rows, colored_records = colored_vs_sequential()
+    rows_out += colored_rows
+    records += colored_records
     rows_out.append(("kernel_bench_json", 0.0, write_bench_json("kernel", records)))
     # interpret-mode correctness-path timing (small shape).
     m = ising.random_layered_model(n=4, L=256, seed=1, beta=1.0)

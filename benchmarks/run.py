@@ -31,6 +31,7 @@ def main() -> None:
         "ladder", "waitprob", "fastexp", "rng", "kernels", "serve", "roofline",
     ]
     rows = []
+    failed = []
     for section in sections:
         print(f"# --- {section} ---", flush=True)
         try:
@@ -78,10 +79,16 @@ def main() -> None:
                 rows.append((section, 0.0, "unknown section"))
         except Exception as e:  # noqa: BLE001
             rows.append((section, 0.0, f"ERROR {type(e).__name__}: {e}"))
+            failed.append(section)
         # stream rows as they come
         while rows:
             name, us, derived = rows.pop(0)
             print(f"{name},{us:.3f},{derived}", flush=True)
+    if failed:
+        # Keep streaming every section, but fail the process so CI gates
+        # (smoke, bench-artifact steps) go red instead of printing an
+        # ERROR row into a green build.
+        sys.exit(f"benchmark sections failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -2,9 +2,9 @@
 
 The CI gate for the engine dispatch table: each registered combination is
 built, run for a couple of sweeps, and sanity-checked (spins stay in
-{-1, +1}; jnp vs pallas-interpret agree bit-exactly on the shared a4 rung;
-one parallel-tempering round runs on the batched engine path).  Timing is
-reported but not asserted — correctness-path only.
+{-1, +1}; jnp vs pallas-interpret agree bit-exactly on the shared a4 and
+cb rungs; one parallel-tempering round runs on the batched engine path).
+Timing is reported but not asserted — correctness-path only.
 """
 
 from __future__ import annotations
@@ -40,20 +40,24 @@ def run():
             return "ok"
         timed(f"jnp_{rung}", one)
 
-    # a4 on the pallas backend (interpret on CPU) + bit-parity vs jnp.
+    # Pallas-implemented rungs (interpret on CPU) + bit-parity vs jnp:
+    # a4 (sequential order) and cb (graph-colored order).
     m_lane = ising.random_layered_model(n=4, L=2 * LANES, seed=1, beta=1.0)
 
-    def pallas_parity():
-        ej = SweepEngine.build(m_lane, rung="a4", backend="jnp", batch=2, V=LANES)
-        ep = SweepEngine.build(m_lane, rung="a4", backend="pallas", batch=2, V=LANES)
-        cj, cp = ej.run(ej.init_carry(seed=2), 2), ep.run(ep.init_carry(seed=2), 2)
-        for f in cj._fields:
-            np.testing.assert_array_equal(
-                np.asarray(getattr(cj, f)), np.asarray(getattr(cp, f)), err_msg=f
+    for rung in ("a4", "cb"):
+        def pallas_parity(rung=rung):
+            ej = SweepEngine.build(m_lane, rung=rung, backend="jnp", batch=2, V=LANES)
+            ep = SweepEngine.build(
+                m_lane, rung=rung, backend="pallas", batch=2, V=LANES
             )
-        return "bit-exact"
+            cj, cp = ej.run(ej.init_carry(seed=2), 2), ep.run(ep.init_carry(seed=2), 2)
+            for f in cj._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(cj, f)), np.asarray(getattr(cp, f)), err_msg=f
+                )
+            return "bit-exact"
 
-    timed("pallas_a4_parity", pallas_parity)
+        timed(f"pallas_{rung}_parity", pallas_parity)
 
     # One PT round per backend on the batched engine path.
     for backend in ("jnp", "pallas"):

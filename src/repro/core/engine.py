@@ -64,13 +64,18 @@ from repro.core import ising, metropolis, mt19937 as mt, reorder
 
 f32 = jnp.float32
 
-RUNGS = ("a1", "a2", "a3", "a4")
+RUNGS = ("a1", "a2", "a3", "a4", "cb")
 FLAT_RUNGS = ("a1", "a2")
-LANE_RUNGS = ("a3", "a4")
+LANE_RUNGS = ("a3", "a4", "cb")
+#: Rungs the Pallas backend implements (fully-vectorized lane layouts).
+PALLAS_RUNGS = ("a4", "cb")
 
 #: Default exp flavour per rung (the paper's A.1 uses exact exp; every
-#: later rung uses the bit-trick fastexp).
-DEFAULT_EXP = {"a1": "exact", "a2": "fast", "a3": "fast", "a4": "fast"}
+#: later rung uses the bit-trick fastexp).  "cb" is the graph-colored
+#: sublattice rung beyond the paper's ladder: one sweep is C whole-lattice
+#: vector updates instead of `rows` sequential row steps (same stationary
+#: distribution, different chain — see DESIGN.md §Coloring).
+DEFAULT_EXP = {"a1": "exact", "a2": "fast", "a3": "fast", "a4": "fast", "cb": "fast"}
 
 #: Seed-scrambling multiplier for per-lane MT19937 seeds (Knuth's 2^32/phi,
 #: the same constant the seed code has always used).
@@ -201,11 +206,15 @@ class SweepEngine:
                 tau_J=jnp.asarray(model.tau_J),
                 h=jnp.asarray(model.h),
             )
+            if rung == "cb":
+                # Host-numpy gather tables; both backends close over them
+                # as trace-time constants.
+                tables["classes"] = reorder.colored_classes(model, V)
         if backend == "pallas":
-            if rung != "a4":
+            if rung not in PALLAS_RUNGS:
                 raise ValueError(
-                    "backend='pallas' implements the fully-vectorized rung "
-                    f"only; got rung={rung!r} (use rung='a4')"
+                    "backend='pallas' implements the fully-vectorized rungs "
+                    f"{PALLAS_RUNGS} only; got rung={rung!r}"
                 )
             from repro.kernels import ops  # deferred: kernels are optional
 
@@ -450,6 +459,38 @@ def _build_jnp(eng: SweepEngine) -> Callable:
                 t["targets"], t["J2"], u, beta, m.space_degree, exp_flavor,
             )
         count = N
+    elif eng.rung == "cb":
+        # The colored sweep never reads the carried fields (it recomputes
+        # h_eff from spins per class), so the per-sweep scan carries only
+        # (spins, rng) and the dense `lane_h_eff` refresh of the carry
+        # fields runs ONCE per run — a pure function of the final spins,
+        # exactly like the fused kernel (`_make_colored_body`), so the
+        # backends stay bit-identical.
+        classes = t["classes"]
+        exp_fn = metropolis.EXP_FNS[exp_flavor]
+        count, B_, V_ = t["rows"], eng.batch, eng.V
+
+        def flip_one(spins, beta, u):
+            return metropolis.colored_flip_spins(spins, u, beta, classes, exp_fn)
+
+        def run_cb(carry: SweepCarry, num_sweeps: int) -> SweepCarry:
+            def sweep_once(sc, _):
+                spins, rng = sc
+                rng, u = mt.mt_uniforms_count(rng, count)
+                u = u.reshape(count, B_, V_).transpose(1, 0, 2)
+                return (jax.vmap(flip_one)(spins, carry.betas, u), rng), None
+
+            (spins, rng), _ = lax.scan(
+                sweep_once, (carry.spins, carry.rng), None, length=num_sweeps
+            )
+            hs, ht = jax.vmap(
+                lambda sp: metropolis.lane_h_eff(
+                    sp, t["h"], t["base_nbr"], t["base_J"], t["tau_J"], m.n
+                )
+            )(spins)
+            return SweepCarry(spins, hs, ht, carry.betas, rng)
+
+        return run_cb
     else:
         scalar_updates = eng.rung == "a3"
 
@@ -490,6 +531,27 @@ def _build_pallas(eng: SweepEngine) -> Callable:
     from repro.kernels import ops
 
     m, t = eng.model, eng.tables
+
+    if eng.rung == "cb":
+        colored_fn = ops.make_colored_multisweep(
+            t["classes"],
+            m.h,
+            m.space_nbr,
+            m.space_J,
+            m.tau_J,
+            n=m.n,
+            exp_flavor=eng.exp_flavor,
+            interpret=eng.interpret,
+            replica_tile=eng.replica_tile,
+        )
+
+        def run_cb(carry: SweepCarry, num_sweeps: int) -> SweepCarry:
+            spins, hs, ht, rng = colored_fn(
+                carry.spins, carry.rng, carry.betas, num_sweeps
+            )
+            return SweepCarry(spins, hs, ht, carry.betas, rng)
+
+        return run_cb
 
     def run(carry: SweepCarry, num_sweeps: int) -> SweepCarry:
         spins, hs, ht, rng = ops.metropolis_multisweep(

@@ -27,6 +27,17 @@ both for bit-exactness (same exp flavour, same uniforms) and for wall-clock
        (reorder.py), masked vector flips, whole-row neighbour updates,
        lane-rotated wrap rows as the special case.
 
+One rung goes beyond the paper's ladder:
+
+  cb   ``sweep_colored``    — graph-colored sublattice order: the lane
+       rows are grouped into C conflict-free color classes
+       (reorder.colored_classes) and one sweep is C whole-lattice masked
+       vector updates instead of ``rows`` sequential row steps.  Same
+       Boltzmann stationary distribution, DIFFERENT chain — not
+       bit-comparable to a1-a4 (DESIGN.md §Coloring), but bit-exact
+       across backends within the rung and it consumes the identical
+       per-sweep uniform stream as a4.
+
 Hardware note (DESIGN.md §Adaptation): branch elimination (§2.1) has no
 direct JAX analogue — XLA always lowers to select/mask — so the A.1->A.2
 delta here measures the data-structure and caching effects only.
@@ -233,12 +244,119 @@ def sweep_lane(
 
 
 # -----------------------------------------------------------------------------
+# "cb" — graph-colored sublattice sweep (beyond the paper's ladder).
+#
+# A.4 vectorizes *within* a spin visit but still walks the rows
+# sequentially, so its hot loop is `rows` tiny (1, V) ops with a serial
+# dependency.  The colored rung removes the serial walk: the lane-layout
+# rows are grouped into C conflict-free color classes (reorder.colored_classes,
+# C ~ 2-4), and one sweep is C whole-lattice vector updates — per class,
+# recompute the class rows' effective fields by pure gathers from the
+# current spins, flip all of them with one masked vector op, write back.
+# Updating a conflict-free class in one shot is equivalent to updating its
+# rows sequentially in any order (they do not interact), so each class
+# update satisfies detailed balance and the composed chain has the same
+# Boltzmann stationary distribution as the sequential sweep — but it is a
+# DIFFERENT chain and cannot be bit-compared to a1-a4 (DESIGN.md §Coloring).
+#
+# There are no scatter-adds anywhere (additions would need a defined order
+# to be reproducible): fields are *recomputed* from spins — per class for
+# the rows being flipped, densely for the whole lattice at sweep end so the
+# carried h_space/h_tau stay consistent.  That makes every operation a
+# deterministic elementwise/gather op, which is what lets the Pallas kernel
+# vmap these exact functions and stay bit-identical to the jnp backend.
+# -----------------------------------------------------------------------------
+
+
+def lane_h_eff(
+    spins: jax.Array,  # (rows, V)
+    h: jax.Array,  # (n,)
+    base_nbr: jax.Array,  # (n, SD)
+    base_J: jax.Array,  # (n, SD) NOT doubled
+    tau_J: jax.Array,  # (n,)
+    n: int,
+):
+    """Dense recomputation of (h_space, h_tau) over the lane layout.
+
+    Pure gathers/rolls, no row loop — the vectorized analogue of
+    ``ising.h_eff_from_scratch``.  Section boundaries: the previous layer
+    of a section-start row is the section-end row one lane over (roll +1),
+    the next layer of a section-end row is the section-start row one lane
+    over (roll -1) — the same wrap the sequential sweep special-cases.
+    """
+    rows, V = spins.shape
+    lpv = rows // n
+    s = spins.reshape(lpv, n, V)
+    hs = jnp.broadcast_to(h[None, :, None].astype(f32), s.shape)
+    for d in range(base_nbr.shape[1]):
+        hs = hs + base_J[None, :, d, None] * s[:, base_nbr[:, d], :]
+    down = jnp.concatenate([jnp.roll(s[-1:], 1, axis=-1), s[:-1]], axis=0)
+    up = jnp.concatenate([s[1:], jnp.roll(s[:1], -1, axis=-1)], axis=0)
+    ht = tau_J[None, :, None] * (down + up)
+    return hs.reshape(rows, V), ht.reshape(rows, V)
+
+
+def colored_flip_spins(
+    spins: jax.Array,  # (rows, V)
+    u: jax.Array,  # (rows, V) uniforms, indexed by row id (the a4 stream)
+    beta,
+    classes,  # tuple of reorder.ColorClass (trace-time constants)
+    exp_fn,
+) -> jax.Array:
+    """One colored sweep over the spins: C whole-lattice masked updates.
+
+    Shared verbatim by the jnp backend (vmapped over replicas) and the
+    Pallas kernel body (vmapped over the replica tile), so the two
+    backends are bit-identical by construction.
+    """
+    for cls in classes:
+        sc = spins[cls.rows]  # (k, V)
+        hs_c = jnp.broadcast_to(jnp.asarray(cls.h, f32)[:, None], sc.shape)
+        for d in range(cls.space_tgt.shape[1]):
+            hs_c = hs_c + cls.space_J[:, d, None] * spins[cls.space_tgt[:, d]]
+        down = spins[cls.down_src]
+        down = jnp.where(cls.down_roll[:, None], jnp.roll(down, 1, axis=-1), down)
+        up = spins[cls.up_src]
+        up = jnp.where(cls.up_roll[:, None], jnp.roll(up, -1, axis=-1), up)
+        ht_c = cls.tau_J[:, None] * (down + up)
+        _, s_new = _flip(sc, hs_c + ht_c, u[cls.rows], beta, exp_fn)
+        spins = spins.at[cls.rows].set(s_new)
+    return spins
+
+
+def sweep_colored(
+    state: LaneState,
+    classes,  # tuple of reorder.ColorClass
+    h: jax.Array,  # (n,)
+    base_nbr: jax.Array,  # (n, SD)
+    base_J: jax.Array,  # (n, SD) NOT doubled
+    tau_J: jax.Array,  # (n,)
+    u: jax.Array,  # (rows, V) uniforms
+    beta,
+    n: int,
+    exp_flavor: str = "fast",
+) -> LaneState:
+    """One colored Metropolis sweep; consumes the identical uniform buffer
+    (one per row, indexed by row id) as `sweep_lane`, so the RNG stream
+    position after k sweeps matches the a4 rung exactly.
+
+    The incoming ``state.h_space``/``h_tau`` are ignored (fields are
+    recomputed from spins); the returned fields are the dense
+    `lane_h_eff` of the new spins, keeping the carry invariant.
+    """
+    exp_fn = EXP_FNS[exp_flavor]
+    spins = colored_flip_spins(state.spins, u, beta, classes, exp_fn)
+    hs, ht = lane_h_eff(spins, h, base_nbr, base_J, tau_J, n)
+    return LaneState(spins, hs, ht)
+
+
+# -----------------------------------------------------------------------------
 # DEPRECATED shims: the drivers now live in repro.core.engine.SweepEngine.
 # Kept for one release so existing callers keep working; both produce spins
 # bit-identical to the engine path (tests/test_engine.py).
 # -----------------------------------------------------------------------------
 
-LADDER = ("a1", "a2", "a3", "a4")
+LADDER = ("a1", "a2", "a3", "a4")  # the paper's rungs; "cb" extends beyond
 
 
 def make_sweeper(

@@ -59,12 +59,15 @@ def make_pt_engine(
     num_replicas: int,
     *,
     V: int = 4,
+    rung: str = "a4",
     backend: str = "jnp",
     exp_flavor: str = "fast",
     interpret: bool | None = None,
     replica_tile: int | None = None,
 ) -> sweep_engine.SweepEngine:
-    """The batched A.4 engine that owns the sweep phase of every PT round.
+    """The batched lane-rung engine that owns the sweep phase of every PT
+    round (``rung="a4"`` sequential order, ``rung="cb"`` colored order —
+    any registered lane rung works, the swap phase only reads spins).
 
     ``backend="pallas"`` forces V to the kernel's 128-lane layout (the
     model's L must be a multiple of 2*128); ``replica_tile`` sizes the
@@ -77,7 +80,7 @@ def make_pt_engine(
         V = ops.LANES
     return sweep_engine.SweepEngine.build(
         m,
-        rung="a4",
+        rung=rung,
         backend=backend,
         batch=num_replicas,
         V=V,
@@ -232,6 +235,7 @@ def run_parallel_tempering(
     seed: int = 0,
     sweeps_per_round: int = 1,
     exp_flavor: str = "fast",
+    rung: str = "a4",
     backend: str = "jnp",
     interpret: bool | None = None,
 ):
@@ -240,10 +244,12 @@ def run_parallel_tempering(
     ``backend="pallas"`` runs each round's sweep phase as one fused
     multi-sweep batched kernel launch (V is forced to the 128-lane layout
     by `make_pt_engine`, so the model needs L % 256 == 0);
-    ``backend="jnp"`` is the vmapped host path.
+    ``backend="jnp"`` is the vmapped host path.  ``rung="cb"`` swaps the
+    sweep phase to the graph-colored chain (same equilibrium, faster
+    per sweep on wide hardware).
     """
     eng = make_pt_engine(
-        m, len(betas), V=V, backend=backend, exp_flavor=exp_flavor,
+        m, len(betas), V=V, rung=rung, backend=backend, exp_flavor=exp_flavor,
         interpret=interpret,
     )
     state = init_pt(m, betas, seed=seed, engine=eng)

@@ -13,32 +13,44 @@ e.g. the paper's production shape (256 layers x 96 spins, rows=192) uses
 ~700 KiB of VMEM — far under the ~16 MiB budget, leaving room to raise the
 replica count per core via the batch grid.
 
-Two kernels share one row-sweep body (`_row_sweep`):
+Two sweep orders are implemented, both fused with in-kernel MT19937:
 
-* ``metropolis_sweep_kernel``      — the historical single-sweep kernel:
-  uniforms are an *input*, generated host-side (one extra HBM round-trip of
-  rows x 128 floats per sweep, plus one kernel launch per sweep).
-* ``metropolis_multisweep_kernel`` — the fused path: each grid step owns
-  its replica's (624, 128) interlaced MT19937 state block, regenerates the
-  sweep's uniforms in-register (twist -> temper -> 24-bit floats, exactly
-  `core/mt19937.py`'s blocked formulation), and advances ``num_sweeps``
-  full sweeps in a `lax.fori_loop` — one `pallas_call` advances
-  ``num_sweeps x B`` replica-sweeps with zero host round-trips.
+* ``metropolis_multisweep_kernel`` — the sequential-order A.4 rung: each
+  grid step owns its replica tile's (624, bt*128) interlaced MT19937 state
+  block, regenerates the sweep's uniforms in-register (twist -> temper ->
+  24-bit floats, exactly `core/mt19937.py`'s blocked formulation), and
+  advances ``num_sweeps`` full sweeps in a `lax.fori_loop` — one
+  `pallas_call` advances ``num_sweeps x B`` replica-sweeps with zero host
+  round-trips.  The row loop is sequential (the paper vectorizes *within*
+  a visit, not across visits); neighbour/coupling tables are pre-gathered
+  per ROW (`_row_tables`) so each row step is one direct dynamic load —
+  no modulo/base index arithmetic and no per-row gather from the (n, SD)
+  site tables in the hot loop.
+* ``make_colored_multisweep_kernel`` — the graph-colored "cb" rung: the
+  row loop is replaced by C whole-lattice masked vector updates (one per
+  conflict-free color class, `reorder.colored_classes`).  The body vmaps
+  the SAME per-replica functions the jnp backend uses
+  (`metropolis.colored_flip_spins` / `metropolis.lane_h_eff`), so the two
+  backends are bit-identical by construction: same uniforms, same class
+  visit order, same elementwise ops.  Effective fields are recomputed by
+  dense gathers once per launch (they are a pure function of the final
+  spins) instead of scatter-adds, which is what keeps every float
+  reproducible.
 
-The per-sweep uniform stream is bit-identical to the host path: both draw
-ceil(rows/624) fresh 624-row blocks per sweep and discard the tail, so
-jnp-backend and Pallas-backend engines produce bit-exact spins
-(tests/test_engine.py).
+The per-sweep uniform stream is bit-identical to the host path for both
+orders: each draws ceil(rows/624) fresh 624-row blocks per sweep and
+discards the tail, so jnp-backend and Pallas-backend engines produce
+bit-exact spins (tests/test_engine.py, tests/test_colored.py).
 
-The row loop is sequential (Metropolis is a sequential-sweep algorithm; the
-paper vectorizes *within* a visit, not across visits), so the body is a
-``fori_loop`` of whole-row VPU ops: masked flips (Figure 10's branch-free
-select), whole-row neighbour updates, and lane-rotated tau wraps for the
-first/last layer blocks (the paper's "special case").
+Validation is via ``interpret=True`` on CPU against the pure-jnp oracles
+in ``ref.py``; the colored body's vmap-over-tile formulation targets the
+interpret/Mosaic-jnp path (a hand-scheduled non-interpret TPU build would
+specialize the gathers).
 
-Scalar-bound caveat: neighbour row indices are loaded from VMEM-resident
-tables; a production TPU build would hoist them to SMEM.  Validation is via
-``interpret=True`` on CPU against the pure-jnp oracles in ``ref.py``.
+``metropolis_sweep_kernel`` (single sweep, host-generated uniforms) is
+DEPRECATED — it survives one release as a thin shim over the shared fused
+body at ``num_sweeps=1`` for the launch-structure benchmark and the
+historical oracle tests.
 """
 
 from __future__ import annotations
@@ -51,10 +63,44 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from repro.core import fastexp as fx
+from repro.core import metropolis as mp
 from repro.core import mt19937 as mt
 
 LANES = 128
 f32 = jnp.float32
+
+
+def _row_tables(base_nbr, base_J2, tau_J2, rows: int, n: int):
+    """Pre-gather the per-site tables into per-ROW tables.
+
+    ``row_nbr[q, d]`` is the ABSOLUTE neighbour row of row ``q`` (the
+    per-row ``base = q - q % n`` offset is folded in ahead of time), and
+    ``row_j2``/``row_tau2`` are the couplings tiled over the layer blocks
+    — so the kernel's row loop does one direct dynamic load per table
+    instead of a modulo, an offset add, and a gather from the (n, SD)
+    site tables.
+    """
+    lpv = rows // n
+    row_nbr = (
+        jnp.arange(lpv, dtype=jnp.int32)[:, None, None] * n + base_nbr[None]
+    ).reshape(rows, base_nbr.shape[1])
+    row_j2 = jnp.tile(base_J2, (lpv, 1))
+    row_tau2 = jnp.tile(tau_J2.reshape(-1, 1), (lpv, 1))
+    return row_nbr, row_j2, row_tau2
+
+
+def _draw_sweep_uniforms(s_rng, blocks: int, rows: int):
+    """One sweep's worth of in-register uniforms from interlaced MT19937
+    state: ``blocks = ceil(rows/624)`` fresh twist/temper blocks, tail rows
+    discarded — THE draw pattern (`mt.mt_uniforms_count`) that keeps the
+    in-kernel stream bit-identical to the host backend.  Returns
+    ``(new_state, u)`` with u of shape (rows, lanes-of-state)."""
+    outs = []
+    for _ in range(blocks):  # static unroll, blocks is tiny
+        s_rng = mt.mt_twist(s_rng)
+        outs.append(mt.mt_temper(s_rng))
+    u32 = outs[0] if blocks == 1 else jnp.concatenate(outs, axis=0)
+    return s_rng, mt.uniforms_from_u32(u32)[:rows]
 
 
 def _row_sweep(
@@ -62,9 +108,9 @@ def _row_sweep(
     o_hs_ref,
     o_ht_ref,
     u,  # (rows, bt*128) f32 VALUE (not a ref) — uniforms for this sweep
-    nbr_ref,  # (n, SD) int32
-    j2_ref,  # (n, SD) f32 (pre-doubled)
-    tau2_ref,  # (n, 1) f32 (pre-doubled)
+    row_nbr_ref,  # (rows, SD) int32 absolute neighbour rows (_row_tables)
+    row_j2_ref,  # (rows, SD) f32 (pre-doubled)
+    row_tau2_ref,  # (rows, 1) f32 (pre-doubled)
     beta,  # (bt, 1, 1) f32
     n: int,
     sd: int,
@@ -72,11 +118,14 @@ def _row_sweep(
     bt: int,
     exp_fn,
 ):
-    """One full sweep over a tile of ``bt`` replicas advanced in lockstep.
+    """One full sequential-order sweep over a tile of ``bt`` replicas.
 
-    Shared by the single-sweep kernel (bt=1 per grid step) and the fused
-    multi-sweep kernel, so the flip/neighbour-update math exists exactly
-    once.  Replica b of the tile owns uniform columns b*128..(b+1)*128.
+    Shared by the fused multi-sweep kernel and the deprecated single-sweep
+    shim, so the flip/neighbour-update math exists exactly once.  Replica
+    b of the tile owns uniform columns b*128..(b+1)*128.  All tables are
+    per-row-gathered, so each step's index arithmetic is a single dynamic
+    row load (first/last layer blocks still special-case the lane-rotated
+    tau wrap, where the target row is an affine function of q).
     """
 
     def rmw(ref, row, contrib):
@@ -94,19 +143,17 @@ def _row_sweep(
         mask = (uq < p).astype(f32)  # Figure 10: branch-free vector select
         smul = s * mask
         pl.store(o_spins_ref, idx, s * (f32(1.0) - f32(2.0) * mask))
-        i = lax.rem(q, n)
-        base = q - i
-        nbr_row = pl.load(nbr_ref, (pl.ds(i, 1), slice(None)))  # (1, SD)
-        j2_row = pl.load(j2_ref, (pl.ds(i, 1), slice(None)))
+        nbr_row = pl.load(row_nbr_ref, (pl.ds(q, 1), slice(None)))  # (1, SD)
+        j2_row = pl.load(row_j2_ref, (pl.ds(q, 1), slice(None)))
         for d in range(sd):  # static unroll over the sparse degree
-            rmw(o_hs_ref, base + nbr_row[0, d], -smul * j2_row[0, d])
-        tc = -smul * pl.load(tau2_ref, (pl.ds(i, 1), slice(None)))[0, 0]
-        if wrap == -1:  # first layer block: down-link wraps, lane -1
-            rmw(o_ht_ref, rows - n + i, jnp.roll(tc, -1, axis=2))
+            rmw(o_hs_ref, nbr_row[0, d], -smul * j2_row[0, d])
+        tc = -smul * pl.load(row_tau2_ref, (pl.ds(q, 1), slice(None)))[0, 0]
+        if wrap == -1:  # first layer block (q in [0, n)): down-link wraps
+            rmw(o_ht_ref, rows - n + q, jnp.roll(tc, -1, axis=2))
             rmw(o_ht_ref, q + n, tc)
-        elif wrap == +1:  # last layer block: up-link wraps, lane +1
+        elif wrap == +1:  # last layer block (q in [rows-n, rows)): up wraps
             rmw(o_ht_ref, q - n, tc)
-            rmw(o_ht_ref, i, jnp.roll(tc, 1, axis=2))
+            rmw(o_ht_ref, q - (rows - n), jnp.roll(tc, 1, axis=2))
         else:
             rmw(o_ht_ref, q - n, tc)
             rmw(o_ht_ref, q + n, tc)
@@ -114,42 +161,6 @@ def _row_sweep(
     lax.fori_loop(0, n, lambda q, _: (row_step(q, -1), 0)[1], 0)
     lax.fori_loop(n, rows - n, lambda q, _: (row_step(q, 0), 0)[1], 0)
     lax.fori_loop(rows - n, rows, lambda q, _: (row_step(q, +1), 0)[1], 0)
-
-
-def _make_body(n: int, sd: int, rows: int, exp_flavor: str):
-    """Single-sweep body: uniforms arrive as an input ref (host-generated).
-
-    Refs are (1, rows, 128) — one replica per grid step, i.e. the shared
-    row sweep at tile size bt=1.
-    """
-    exp_fn = fx.EXP_FNS[exp_flavor]
-
-    def body(
-        spins_ref,
-        hs_ref,
-        ht_ref,
-        u_ref,
-        nbr_ref,
-        j2_ref,
-        tau2_ref,
-        beta_ref,  # (1, 1) f32 per-replica
-        o_spins_ref,
-        o_hs_ref,
-        o_ht_ref,
-    ):
-        # Copy state into the output refs, then update in place.
-        o_spins_ref[...] = spins_ref[...]
-        o_hs_ref[...] = hs_ref[...]
-        o_ht_ref[...] = ht_ref[...]
-        _row_sweep(
-            o_spins_ref, o_hs_ref, o_ht_ref,
-            u_ref[...].reshape(rows, LANES),
-            nbr_ref, j2_ref, tau2_ref,
-            beta_ref[...].reshape(1, 1, 1),
-            n, sd, rows, 1, exp_fn,
-        )
-
-    return body
 
 
 def _make_fused_body(
@@ -160,30 +171,62 @@ def _make_fused_body(
     blocks: int,
     num_sweeps: int,
     exp_flavor: str,
+    host_uniforms: bool = False,
 ):
-    """Fused body: in-kernel MT19937 + ``num_sweeps`` sweeps over a TILE of
-    ``bt`` replicas advanced in lockstep.
+    """Sequential-order sweep body over a TILE of ``bt`` replicas.
 
-    This is the paper's batching insight applied twice: layers fill the 128
-    lanes, and replicas fill an extra leading vector dimension — one twist
-    of the (624, bt*128) generator state and one (bt, 1, 128) row op
-    advance all bt replicas together, instead of looping a grid over
-    replicas (which serialises bt small ops per step).
+    The default flavour fuses the RNG: the tile owns its (624, bt*128)
+    interlaced MT19937 block and draws ``blocks = ceil(rows/624)`` fresh
+    generator blocks per sweep, tail discarded — the exact draw pattern of
+    the host path (`engine._build_jnp`), which is what makes the two
+    backends bit-exact.  This is the paper's batching insight applied
+    twice: layers fill the 128 lanes, and replicas fill an extra leading
+    vector dimension.
 
-    ``blocks = ceil(rows / 624)`` fresh generator blocks are drawn per sweep
-    and the tail rows discarded — the exact draw pattern of the host path
-    (`engine._build_jnp`), which is what makes the two backends bit-exact.
+    ``host_uniforms=True`` is the DEPRECATED single-sweep flavour (uniforms
+    arrive as an input ref, ``num_sweeps`` must be 1) kept for the
+    launch-structure benchmark; it shares `_row_sweep` so no sweep math is
+    duplicated.
     """
     exp_fn = fx.EXP_FNS[exp_flavor]
+
+    if host_uniforms:
+        assert num_sweeps == 1, "host-uniform flavour is single-sweep only"
+
+        def u_body(
+            spins_ref,  # (bt, rows, 128)
+            hs_ref,
+            ht_ref,
+            u_ref,  # (bt, rows, 128) host-generated uniforms
+            row_nbr_ref,
+            row_j2_ref,
+            row_tau2_ref,
+            beta_ref,  # (bt, 1) f32
+            o_spins_ref,
+            o_hs_ref,
+            o_ht_ref,
+        ):
+            o_spins_ref[...] = spins_ref[...]
+            o_hs_ref[...] = hs_ref[...]
+            o_ht_ref[...] = ht_ref[...]
+            u = u_ref[...].transpose(1, 0, 2).reshape(rows, bt * LANES)
+            _row_sweep(
+                o_spins_ref, o_hs_ref, o_ht_ref, u,
+                row_nbr_ref, row_j2_ref, row_tau2_ref,
+                beta_ref[...].reshape(bt, 1, 1),
+                n, sd, rows, bt, exp_fn,
+            )
+
+        return u_body
 
     def body(
         spins_ref,  # (bt, rows, 128)
         hs_ref,
         ht_ref,
         rng_ref,  # (624, bt*128) uint32 — the tile's interlaced MT19937
-        nbr_ref,  # (n, SD) int32
-        j2_ref,  # (n, SD) f32 (pre-doubled)
-        tau2_ref,  # (n, 1) f32 (pre-doubled)
+        row_nbr_ref,  # (rows, SD) int32 absolute rows
+        row_j2_ref,  # (rows, SD) f32 (pre-doubled)
+        row_tau2_ref,  # (rows, 1) f32 (pre-doubled)
         beta_ref,  # (bt, 1) f32
         o_spins_ref,
         o_hs_ref,
@@ -197,17 +240,12 @@ def _make_fused_body(
         beta = beta_ref[...].reshape(bt, 1, 1)
 
         def sweep_step(_k, carry):
-            s_rng = o_rng_ref[...]
-            outs = []
-            for _ in range(blocks):  # static unroll, blocks is tiny
-                s_rng = mt.mt_twist(s_rng)
-                outs.append(mt.mt_temper(s_rng))
+            s_rng, u = _draw_sweep_uniforms(o_rng_ref[...], blocks, rows)
             o_rng_ref[...] = s_rng
-            u32 = outs[0] if blocks == 1 else jnp.concatenate(outs, axis=0)
-            u = mt.uniforms_from_u32(u32)[:rows]  # (rows, bt*128)
             _row_sweep(
                 o_spins_ref, o_hs_ref, o_ht_ref, u,
-                nbr_ref, j2_ref, tau2_ref, beta, n, sd, rows, bt, exp_fn,
+                row_nbr_ref, row_j2_ref, row_tau2_ref,
+                beta, n, sd, rows, bt, exp_fn,
             )
             return carry
 
@@ -232,11 +270,20 @@ def metropolis_sweep_kernel(
     exp_flavor: str = "fast",
     interpret: bool = True,
 ):
-    """One vectorized sweep for each of B replicas (grid over replicas)."""
+    """DEPRECATED single-sweep kernel (host-generated uniforms, one launch
+    per sweep): a thin shim over the shared fused body at ``num_sweeps=1``.
+    New code should use `metropolis_multisweep_kernel` (in-kernel RNG); this
+    survives one release as the seed-architecture baseline that
+    `benchmarks.kernel_bench.launch_structure_compare` measures against and
+    as the entry the historical oracle tests exercise.
+    """
     B, rows, lanes = spins.shape
     assert lanes == LANES, spins.shape
     sd = base_nbr.shape[1]
-    body = _make_body(n, sd, rows, exp_flavor)
+    row_nbr, row_j2, row_tau2 = _row_tables(base_nbr, base_J2, tau_J2, rows, n)
+    body = _make_fused_body(
+        n, sd, rows, 1, 0, 1, exp_flavor, host_uniforms=True
+    )
     rep_spec = pl.BlockSpec((1, rows, LANES), lambda b: (b, 0, 0))
     shared2d = lambda a: pl.BlockSpec(a.shape, lambda b: (0, 0))
     out = pl.pallas_call(
@@ -250,14 +297,14 @@ def metropolis_sweep_kernel(
             rep_spec,
             rep_spec,
             rep_spec,
-            shared2d(base_nbr),
-            shared2d(base_J2),
-            shared2d(tau_J2),
+            shared2d(row_nbr),
+            shared2d(row_j2),
+            shared2d(row_tau2),
             pl.BlockSpec((1, 1), lambda b: (b, 0)),
         ],
         out_specs=(rep_spec, rep_spec, rep_spec),
         interpret=interpret,
-    )(spins, h_space, h_tau, u, base_nbr, base_J2, tau_J2, beta)
+    )(spins, h_space, h_tau, u, row_nbr, row_j2, row_tau2, beta)
     return out
 
 
@@ -297,6 +344,7 @@ def metropolis_multisweep_kernel(
         raise ValueError(f"replica_tile {bt} must divide batch {B}")
     sd = base_nbr.shape[1]
     blocks = -(-rows // mt.N)  # ceil
+    row_nbr, row_j2, row_tau2 = _row_tables(base_nbr, base_J2, tau_J2, rows, n)
     body = _make_fused_body(n, sd, rows, bt, blocks, num_sweeps, exp_flavor)
     tile_spec = pl.BlockSpec((bt, rows, LANES), lambda g: (g, 0, 0))
     rng_spec = pl.BlockSpec((mt.N, bt * LANES), lambda g: (0, g))
@@ -315,12 +363,138 @@ def metropolis_multisweep_kernel(
             tile_spec,
             tile_spec,
             rng_spec,
-            shared2d(base_nbr),
-            shared2d(base_J2),
-            shared2d(tau_J2),
+            shared2d(row_nbr),
+            shared2d(row_j2),
+            shared2d(row_tau2),
             pl.BlockSpec((bt, 1), lambda g: (g, 0)),
         ],
         out_specs=(tile_spec, tile_spec, tile_spec, rng_spec),
         interpret=interpret,
-    )(spins, h_space, h_tau, rng, base_nbr, base_J2, tau_J2, beta)
+    )(spins, h_space, h_tau, rng, row_nbr, row_j2, row_tau2, beta)
     return out
+
+
+# -----------------------------------------------------------------------------
+# Graph-colored "cb" rung: C whole-lattice vector updates per sweep.
+# -----------------------------------------------------------------------------
+
+
+def _make_colored_body(
+    tables_treedef,
+    n: int,
+    rows: int,
+    bt: int,
+    blocks: int,
+    num_sweeps: int,
+    exp_flavor: str,
+):
+    """Fused colored-sweep body over a tile of ``bt`` replicas.
+
+    No row loop: each sweep is C masked whole-lattice updates, computed by
+    vmapping the per-replica `metropolis.colored_flip_spins` over the tile
+    — literally the jnp backend's function, so jnp-vs-pallas bit-exactness
+    is structural, not coincidental.  Spins ride the sweep `fori_loop` as
+    the carry; the effective fields are a pure function of the final spins
+    and are recomputed ONCE per launch by the dense `metropolis.lane_h_eff`
+    (identical to the jnp backend's per-sweep recompute of the last sweep).
+
+    The coloring/coupling tables arrive as trailing input refs (Pallas
+    forbids captured array constants); ``tables_treedef`` restores the
+    (classes, h, base_nbr, base_J, tau_J) pytree from their values.
+    """
+    exp_fn = fx.EXP_FNS[exp_flavor]
+
+    def body(spins_ref, rng_ref, beta_ref, *refs):
+        *table_refs, o_spins_ref, o_hs_ref, o_ht_ref, o_rng_ref = refs
+        classes, h, base_nbr, base_J, tau_J = jax.tree_util.tree_unflatten(
+            tables_treedef, [r[...] for r in table_refs]
+        )
+        o_rng_ref[...] = rng_ref[...]
+        beta_vec = beta_ref[...].reshape(bt)
+
+        def sweep_step(_k, s):
+            s_rng, u = _draw_sweep_uniforms(o_rng_ref[...], blocks, rows)
+            o_rng_ref[...] = s_rng
+            u_t = u.reshape(rows, bt, LANES).transpose(1, 0, 2)
+            return jax.vmap(
+                lambda sb, ub, bb: mp.colored_flip_spins(
+                    sb, ub, bb, classes, exp_fn
+                )
+            )(s, u_t, beta_vec)
+
+        s = lax.fori_loop(0, num_sweeps, sweep_step, spins_ref[...])
+        o_spins_ref[...] = s
+        hs, ht = jax.vmap(
+            lambda sb: mp.lane_h_eff(sb, h, base_nbr, base_J, tau_J, n)
+        )(s)
+        o_hs_ref[...] = hs
+        o_ht_ref[...] = ht
+
+    return body
+
+
+def make_colored_multisweep_kernel(
+    classes,  # tuple of reorder.ColorClass (host numpy)
+    h,  # (n,) f32
+    base_nbr,  # (n, SD) int32
+    base_J,  # (n, SD) f32 NOT doubled
+    tau_J,  # (n,) f32 NOT doubled
+    n: int,
+    exp_flavor: str = "fast",
+    interpret: bool = True,
+    replica_tile: int | None = None,
+):
+    """Build the fused colored-sweep entry for one model.
+
+    The coloring and coupling tables are closed over per model (like the
+    body itself) and shipped as shared kernel inputs, so the returned
+    callable is simply ``fn(spins, rng, beta, num_sweeps) -> (spins,
+    h_space, h_tau, rng)`` with ``num_sweeps`` static.  Unlike the
+    sequential kernels there are no h_space/h_tau *inputs*: the colored
+    sweep recomputes fields from spins (DESIGN.md §Coloring), so shipping
+    them in would be dead HBM traffic.
+    """
+    tables = (
+        jax.tree_util.tree_map(jnp.asarray, tuple(classes)),
+        jnp.asarray(h, jnp.float32),
+        jnp.asarray(base_nbr, jnp.int32),
+        jnp.asarray(base_J, jnp.float32),
+        jnp.asarray(tau_J, jnp.float32),
+    )
+    table_leaves, tables_treedef = jax.tree_util.tree_flatten(tables)
+
+    @functools.partial(jax.jit, static_argnums=(3,))
+    def fn(spins, rng, beta, num_sweeps):
+        B, rows, lanes = spins.shape
+        assert lanes == LANES, spins.shape
+        assert rng.shape == (mt.N, B * LANES), (rng.shape, B)
+        bt = B if replica_tile is None else replica_tile
+        if B % bt != 0:
+            raise ValueError(f"replica_tile {bt} must divide batch {B}")
+        blocks = -(-rows // mt.N)  # ceil
+        body = _make_colored_body(
+            tables_treedef, n, rows, bt, blocks, num_sweeps, exp_flavor
+        )
+        tile_spec = pl.BlockSpec((bt, rows, LANES), lambda g: (g, 0, 0))
+        rng_spec = pl.BlockSpec((mt.N, bt * LANES), lambda g: (0, g))
+        shared = lambda a: pl.BlockSpec(a.shape, lambda g: (0,) * a.ndim)
+        return pl.pallas_call(
+            body,
+            out_shape=(
+                jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
+                jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
+                jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
+                jax.ShapeDtypeStruct((mt.N, B * LANES), jnp.uint32),
+            ),
+            grid=(B // bt,),
+            in_specs=[
+                tile_spec,
+                rng_spec,
+                pl.BlockSpec((bt, 1), lambda g: (g, 0)),
+                *[shared(a) for a in table_leaves],
+            ],
+            out_specs=(tile_spec, tile_spec, tile_spec, rng_spec),
+            interpret=interpret,
+        )(spins, rng, beta.reshape(-1, 1), *table_leaves)
+
+    return fn

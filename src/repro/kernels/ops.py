@@ -61,7 +61,10 @@ def metropolis_sweep(
     exp_flavor: str = "fast",
     interpret=None,
 ):
-    """Batched vectorized Metropolis sweep; see metropolis_kernel."""
+    """DEPRECATED single-sweep entry (host-generated uniforms, one launch
+    per sweep); kept one release for the launch-structure benchmark and the
+    historical oracle tests.  Use `metropolis_multisweep` (fused RNG) or
+    `make_colored_multisweep` (colored order) in new code."""
     interpret = _auto_interpret(interpret)
     return metropolis_kernel.metropolis_sweep_kernel(
         spins,
@@ -112,6 +115,39 @@ def metropolis_multisweep(
         jnp.reshape(beta, (-1, 1)),
         n,
         num_sweeps,
+        exp_flavor,
+        interpret,
+        replica_tile,
+    )
+
+
+def make_colored_multisweep(
+    classes,
+    h,
+    base_nbr,
+    base_J,
+    tau_J,
+    n: int,
+    exp_flavor: str = "fast",
+    interpret=None,
+    replica_tile: int | None = None,
+):
+    """Build the fused graph-colored sweep entry (the "cb" rung) for one
+    model: ``fn(spins, rng, beta, num_sweeps) -> (spins, h_space, h_tau,
+    rng)`` with in-kernel MT19937 and ``num_sweeps`` static.
+
+    ``classes`` is `reorder.colored_classes(model, 128)`; coupling tables
+    are the UNDOUBLED model arrays (the colored sweep recomputes fields
+    rather than incrementally updating them).  See metropolis_kernel.
+    """
+    interpret = _auto_interpret(interpret)
+    return metropolis_kernel.make_colored_multisweep_kernel(
+        classes,
+        h,
+        base_nbr,
+        base_J,
+        tau_J,
+        n,
         exp_flavor,
         interpret,
         replica_tile,

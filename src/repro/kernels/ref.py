@@ -85,3 +85,37 @@ def metropolis_multisweep_ref(
         u = u.reshape(rows, B, V).transpose(1, 0, 2)
         spins, h_space, h_tau = jax.vmap(one)(spins, h_space, h_tau, u, beta)
     return spins, h_space, h_tau, rng
+
+
+def colored_multisweep_ref(
+    spins,
+    rng,  # (624, B*V) interlaced MT19937 state
+    beta,
+    classes,  # reorder.colored_classes(m, V)
+    h,
+    base_nbr,
+    base_J,  # NOT doubled
+    tau_J,  # NOT doubled
+    n,
+    num_sweeps,
+    exp_flavor="fast",
+):
+    """Colored-sweep oracle mirroring `ops.make_colored_multisweep`:
+    host-side bulk RNG + vmapped `metropolis.sweep_colored`, same
+    per-sweep draw pattern and class visit order as the fused kernel."""
+    B, rows, V = spins.shape
+    beta = beta.reshape(-1)
+    h_space = h_tau = jnp.zeros_like(spins)  # ignored by the colored sweep
+
+    def one(s, hs, ht, uu, b):
+        st = mp.sweep_colored(
+            mp.LaneState(s, hs, ht), classes, h, base_nbr, base_J, tau_J,
+            uu, b, n, exp_flavor,
+        )
+        return st.spins, st.h_space, st.h_tau
+
+    for _ in range(num_sweeps):
+        rng, u = mt.mt_uniforms_count(rng, rows)
+        u = u.reshape(rows, B, V).transpose(1, 0, 2)
+        spins, h_space, h_tau = jax.vmap(one)(spins, h_space, h_tau, u, beta)
+    return spins, h_space, h_tau, rng

@@ -10,6 +10,6 @@ sweeps is a single (on pallas: fused) launch for all of them.
 """
 
 from repro.serve_mc.jobs import AnnealJob, JobResult, PTJob
-from repro.serve_mc.scheduler import SampleServer
+from repro.serve_mc.scheduler import AdaptiveChunker, SampleServer
 
-__all__ = ["AnnealJob", "PTJob", "JobResult", "SampleServer"]
+__all__ = ["AdaptiveChunker", "AnnealJob", "PTJob", "JobResult", "SampleServer"]

@@ -15,7 +15,11 @@ the GPU/TPU never sees:
   chunk    ``min(chunk_sweeps, min remaining-in-segment over active
            jobs)`` — chunks never cross a segment boundary, so per-job
            beta schedules and tempering swap points land exactly where a
-           solo run would put them.
+           solo run would put them.  ``chunk_sweeps="adaptive"`` replaces
+           the static knob with `AdaptiveChunker`: a measured per-launch
+           cost EWMA and the queue depth pick each chunk from a bounded
+           power-of-two menu (latency SLO vs throughput, with a bounded
+           jit cache).
   hooks    jobs whose segment ended run `on_segment` (anneal jobs rewrite
            their slot's beta; PT jobs run the swap phase over their
            slots).
@@ -34,13 +38,92 @@ at segment boundaries.  Idle slots keep sweeping whatever they last held
 
 from __future__ import annotations
 
-from collections import deque
+import time
+from collections import Counter, deque
 from typing import List
+
+import jax
 
 from repro.core import ising
 from repro.core.engine import SweepEngine
 
 from repro.serve_mc.jobs import JobResult
+
+
+class AdaptiveChunker:
+    """Chunk-size policy: launch-cost EWMA + queue depth -> menu chunk.
+
+    ``chunk_sweeps="adaptive"`` replaces the static knob (ROADMAP
+    "Adaptive chunk sizing").  Two pressures trade off: bigger chunks
+    amortize per-launch overhead (throughput), smaller chunks reach
+    admit/retire points sooner so queued jobs start earlier (latency).
+    The policy measures the per-sweep launch cost as an EWMA and sizes
+    the next chunk to a target launch wall time, shrunk by the current
+    queue depth; the result is floored to a fixed power-of-two MENU so
+    the engine's per-``num_sweeps`` jit cache stays bounded by
+    ``len(menu)`` entries no matter how traffic fluctuates (chunks are
+    additionally capped at segment boundaries, and every such clamp is
+    floored to the menu too — 1 is always a member).
+
+    Chunk size never changes results (DESIGN.md §Service determinism
+    contract), so adapting it on wall-clock measurements is safe.
+
+    An instance holds per-engine state (the EWMA and the set of
+    already-compiled chunk sizes): give each `SampleServer` its OWN
+    chunker — sharing one across servers would treat the second server's
+    compiles as warm launches and poison the EWMA.
+    """
+
+    def __init__(
+        self,
+        target_launch_s: float = 0.05,
+        max_chunk: int = 64,
+        init_chunk: int = 8,
+        alpha: float = 0.3,
+    ):
+        if max_chunk < 1:
+            raise ValueError(f"max_chunk must be >= 1, got {max_chunk}")
+        menu = [1]
+        while menu[-1] * 2 <= max_chunk:
+            menu.append(menu[-1] * 2)
+        self.menu = tuple(menu)
+        self.target_launch_s = float(target_launch_s)
+        self.init_chunk = int(init_chunk)
+        self.alpha = float(alpha)
+        self.per_sweep_ewma: float | None = None
+        self._warm: set[int] = set()  # chunk sizes whose jit is compiled
+
+    def floor_to_menu(self, k: int) -> int:
+        """Largest menu chunk <= max(1, k)."""
+        k = max(1, int(k))
+        out = 1
+        for c in self.menu:
+            if c <= k:
+                out = c
+        return out
+
+    def propose(self, queue_depth: int, segment_bound: int) -> int:
+        """Next chunk: cost-targeted, queue-shrunk, boundary-capped."""
+        if self.per_sweep_ewma is None or self.per_sweep_ewma <= 0.0:
+            desired = float(self.init_chunk)
+        else:
+            desired = self.target_launch_s / self.per_sweep_ewma
+        desired = desired / (1 + queue_depth)
+        return self.floor_to_menu(int(min(desired, segment_bound)))
+
+    def observe(self, chunk: int, launch_s: float) -> None:
+        if chunk not in self._warm:
+            # First launch at a chunk size pays one-time trace+compile
+            # (num_sweeps is a static jit arg) — orders of magnitude above
+            # steady state; recording it would collapse the policy to
+            # chunk=1 for the whole warm-up ramp.  Discard it.
+            self._warm.add(chunk)
+            return
+        per_sweep = launch_s / max(1, chunk)
+        if self.per_sweep_ewma is None:
+            self.per_sweep_ewma = per_sweep
+        else:
+            self.per_sweep_ewma += self.alpha * (per_sweep - self.per_sweep_ewma)
 
 
 class SampleServer:
@@ -51,7 +134,7 @@ class SampleServer:
         model: ising.LayeredModel,
         *,
         slots: int = 8,
-        chunk_sweeps: int = 8,
+        chunk_sweeps: int | str = 8,
         rung: str = "a4",
         backend: str = "jnp",
         V: int = 4,
@@ -59,9 +142,18 @@ class SampleServer:
         interpret: bool | None = None,
         replica_tile: int | None = None,
         idle_seed: int = 0,
+        chunker: AdaptiveChunker | None = None,
     ):
-        if chunk_sweeps < 1:
+        if chunk_sweeps == "adaptive":
+            self._chunker = chunker or AdaptiveChunker()
+        elif isinstance(chunk_sweeps, str):
+            raise ValueError(
+                f"chunk_sweeps must be an int >= 1 or 'adaptive', got {chunk_sweeps!r}"
+            )
+        elif chunk_sweeps < 1:
             raise ValueError(f"chunk_sweeps must be >= 1, got {chunk_sweeps}")
+        else:
+            self._chunker = None
         if backend == "pallas":
             from repro.kernels import ops  # deferred: kernels are optional
 
@@ -79,7 +171,7 @@ class SampleServer:
         # Idle slots hold (and keep sweeping) this placeholder state until
         # a job is spliced over it.
         self.carry = self.engine.init_carry(seed=idle_seed)
-        self.chunk_sweeps = int(chunk_sweeps)
+        self.chunk_sweeps = None if self._chunker else int(chunk_sweeps)
         self._queue: deque = deque()
         self._active: dict[int, tuple] = {}  # jid -> (job, slots tuple)
         self._free: list[int] = list(range(slots))
@@ -88,6 +180,8 @@ class SampleServer:
         self.launches = 0
         self.busy_slot_sweeps = 0
         self.total_slot_sweeps = 0
+        self.launch_chunks: Counter = Counter()  # chunk size -> launch count
+        # (a Counter, not a log: a resident server launches forever)
 
     # -- submission -----------------------------------------------------------
 
@@ -139,11 +233,16 @@ class SampleServer:
         self._admit()
         if not self._active:
             return []
-        chunk = min(
-            self.chunk_sweeps,
-            min(j.remaining_in_segment() for j, _ in self._active.values()),
-        )
-        self.carry = self.engine.run(self.carry, chunk)
+        bound = min(j.remaining_in_segment() for j, _ in self._active.values())
+        if self._chunker is not None:
+            chunk = self._chunker.propose(len(self._queue), bound)
+            t0 = time.perf_counter()
+            self.carry = jax.block_until_ready(self.engine.run(self.carry, chunk))
+            self._chunker.observe(chunk, time.perf_counter() - t0)
+        else:
+            chunk = min(self.chunk_sweeps, bound)
+            self.carry = self.engine.run(self.carry, chunk)
+        self.launch_chunks[chunk] += 1
         self.launches += 1
         busy = sum(j.num_slots for j, _ in self._active.values())
         self.busy_slot_sweeps += chunk * busy
@@ -175,6 +274,10 @@ class SampleServer:
         return {
             "slots": self.slots,
             "launches": self.launches,
+            # Distinct chunk sizes == distinct compiled run executables
+            # (num_sweeps is a static jit arg); the adaptive chunker keeps
+            # this bounded by its menu size.
+            "distinct_chunks": len(self.launch_chunks),
             "busy_slot_sweeps": self.busy_slot_sweeps,
             "total_slot_sweeps": self.total_slot_sweeps,
             "utilization": (

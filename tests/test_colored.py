@@ -1,0 +1,251 @@
+"""The graph-colored "cb" rung: coloring validity, backend bit-exactness,
+serve determinism, and equilibrium-statistics agreement with a4.
+
+The colored sweep is a DIFFERENT Markov chain than the sequential rungs
+(same Boltzmann stationary distribution, different visit order), so
+validation is two-sided (DESIGN.md §Coloring):
+
+  * within the rung, jnp and Pallas(interpret) backends must be
+    BIT-exact — same uniforms, same class visit order, same elementwise
+    ops — across wrap-row shapes, batch sizes, replica tiling, and
+    consecutive `run` calls;
+  * across rungs, a seeded statistical test checks that cb and a4 agree
+    on equilibrium energy/magnetization at fixed beta within combined
+    standard errors.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import engine, ising, mt19937, observables, reorder
+from repro.kernels import ops, ref
+from repro.serve_mc import AnnealJob, SampleServer
+
+LANES = 128
+
+
+def _carry_equal(a, b, msg=""):
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{msg} field={f}",
+        )
+
+
+# -----------------------------------------------------------------------------
+# Coloring validity.
+# -----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n,L,V",
+    [
+        (5, 8, 4),  # lpv=2: every row is a wrap row
+        (6, 12, 4),  # lpv=3: odd cycle needs a 3rd cycle color
+        (4, 256, 128),  # kernel lane width
+        (96, 256, 128),  # paper production shape
+    ],
+)
+def test_coloring_is_proper_and_small(n, L, V):
+    m = ising.random_layered_model(n=n, L=L, seed=n + L, beta=1.0)
+    rows = reorder.check_lane_shape(m.n, m.L, V)
+    lpv = rows // m.n
+    classes = reorder.colored_classes(m, V)
+    # Classes partition the rows.
+    all_rows = np.concatenate([c.rows for c in classes])
+    assert sorted(all_rows.tolist()) == list(range(rows))
+    color = np.empty(rows, np.int32)
+    for c, cls in enumerate(classes):
+        color[cls.rows] = c
+    # Proper: no row shares a color with any conflicting row (space
+    # neighbours in-block, tau neighbours +-1 block mod lpv).
+    for q in range(rows):
+        p, i = divmod(q, m.n)
+        conflicts = {p * m.n + int(j) for j in m.space_nbr[i] if int(j) != i}
+        conflicts |= {((p - 1) % lpv) * m.n + i, ((p + 1) % lpv) * m.n + i}
+        for r in conflicts:
+            assert color[r] != color[q], (q, r)
+    # Small palette: product coloring gives max(chi_cycle, chi_greedy(base)).
+    assert len(classes) <= m.space_degree + 2
+
+
+def test_colored_class_tables_match_layout():
+    """Gather tables agree with the lane layout: flipping via the tables'
+    neighbour rows must see exactly the spins `lane_h_eff` sees."""
+    m = ising.random_layered_model(n=5, L=12, seed=2, beta=1.0)
+    V = 4
+    classes = reorder.colored_classes(m, V)
+    rows = reorder.check_lane_shape(m.n, m.L, V)
+    lpv = rows // m.n
+    for cls in classes:
+        p, i = cls.rows // m.n, cls.rows % m.n
+        np.testing.assert_array_equal(cls.down_roll, p == 0)
+        np.testing.assert_array_equal(cls.up_roll, p == lpv - 1)
+        np.testing.assert_array_equal(cls.h, m.h[i])
+        np.testing.assert_array_equal(cls.tau_J, m.tau_J[i])
+        np.testing.assert_array_equal(
+            cls.space_tgt, p[:, None] * m.n + m.space_nbr[i]
+        )
+
+
+# -----------------------------------------------------------------------------
+# jnp vs pallas (interpret) bit-exact parity.
+# -----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "L,batch",
+    [
+        (2 * LANES, 1),  # lpv=2: only wrap rows (first/last layer blocks)
+        (3 * LANES, 1),  # lpv=3: wrap rows + middle rows, odd cycle
+        (2 * LANES, 3),  # batched replicas
+    ],
+)
+def test_cb_jnp_vs_pallas_bit_exact(L, batch):
+    m = ising.random_layered_model(n=4, L=L, seed=L + batch, beta=0.9)
+    ej = engine.SweepEngine.build(m, rung="cb", backend="jnp", batch=batch, V=LANES)
+    ep = engine.SweepEngine.build(m, rung="cb", backend="pallas", batch=batch, V=LANES)
+    cj, cp = ej.init_carry(seed=3), ep.init_carry(seed=3)
+    _carry_equal(cj, cp, "init")
+    cj, cp = ej.run(cj, 3), ep.run(cp, 3)
+    _carry_equal(cj, cp, "after 3 sweeps")
+    # Second run call continues the same stream on both backends.
+    cj, cp = ej.run(cj, 2), ep.run(cp, 2)
+    _carry_equal(cj, cp, "after 3+2 sweeps")
+
+
+def test_cb_kernel_matches_ref_oracle():
+    m = ising.random_layered_model(n=4, L=3 * LANES, seed=11, beta=1.0)
+    classes = reorder.colored_classes(m, LANES)
+    spins, _hs, _ht, _u, nbr, _J2, _tau2, beta = ops.make_kernel_inputs(
+        m, batch=2, seed=4
+    )
+    rng = mt19937.mt_init(engine.lane_seeds(2, LANES, 5))
+    fn = ops.make_colored_multisweep(
+        classes, m.h, m.space_nbr, m.space_J, m.tau_J, n=m.n, interpret=True
+    )
+    out_k = fn(spins, rng, beta, 3)
+    out_r = ref.colored_multisweep_ref(
+        spins, rng, beta, classes, m.h, m.space_nbr, m.space_J, m.tau_J, m.n, 3
+    )
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cb_replica_tiling_bit_equal():
+    m = ising.random_layered_model(n=4, L=2 * LANES, seed=8, beta=1.0)
+    whole = engine.SweepEngine.build(m, rung="cb", backend="pallas", batch=4, V=LANES)
+    cw = whole.run(whole.init_carry(seed=6), 2)
+    for tile in (1, 2):
+        tiled = engine.SweepEngine.build(
+            m, rung="cb", backend="pallas", batch=4, V=LANES, replica_tile=tile
+        )
+        ct = tiled.run(tiled.init_carry(seed=6), 2)
+        _carry_equal(cw, ct, f"replica_tile={tile}")
+
+
+# -----------------------------------------------------------------------------
+# Chain invariants.
+# -----------------------------------------------------------------------------
+
+
+def test_cb_h_eff_invariant():
+    """Recomputed carry fields stay consistent with the from-scratch
+    oracle after multiple runs."""
+    m = ising.random_layered_model(n=5, L=2 * LANES, seed=7, beta=0.8)
+    eng = engine.SweepEngine.build(m, rung="cb", backend="pallas", batch=1, V=LANES)
+    carry = eng.run(eng.init_carry(seed=1), 4)
+    flat = eng.spins_flat(carry)[0]
+    hs_ref, ht_ref = ising.h_eff_from_scratch(m, flat)
+    hs = reorder.from_lane(np.asarray(carry.h_space[0]), m.n, m.L, LANES)
+    ht = reorder.from_lane(np.asarray(carry.h_tau[0]), m.n, m.L, LANES)
+    np.testing.assert_allclose(hs, hs_ref, atol=2e-4)
+    np.testing.assert_allclose(ht, ht_ref, atol=2e-4)
+
+
+def test_cb_consumes_the_a4_stream():
+    """Both rungs draw ceil(rows/624) blocks per sweep: after k sweeps the
+    generator state is identical, so rungs can be hot-swapped mid-stream."""
+    m = ising.random_layered_model(n=6, L=16, seed=1, beta=1.0)
+    e_cb = engine.SweepEngine.build(m, rung="cb", backend="jnp", batch=2, V=4)
+    e_a4 = engine.SweepEngine.build(m, rung="a4", backend="jnp", batch=2, V=4)
+    c_cb = e_cb.run(e_cb.init_carry(seed=5), 3)
+    c_a4 = e_a4.run(e_a4.init_carry(seed=5), 3)
+    np.testing.assert_array_equal(np.asarray(c_cb.rng), np.asarray(c_a4.rng))
+
+
+def test_cb_differs_from_a4_spins():
+    """The colored chain is a different chain — identical trajectories
+    would mean the rung silently fell back to sequential order."""
+    m = ising.random_layered_model(n=6, L=16, seed=1, beta=1.0)
+    e_cb = engine.SweepEngine.build(m, rung="cb", backend="jnp", batch=1, V=4)
+    e_a4 = engine.SweepEngine.build(m, rung="a4", backend="jnp", batch=1, V=4)
+    s_cb = e_cb.spins_flat(e_cb.run(e_cb.init_carry(seed=5), 5))
+    s_a4 = e_a4.spins_flat(e_a4.run(e_a4.init_carry(seed=5), 5))
+    assert not np.array_equal(s_cb, s_a4)
+
+
+def test_cb_pallas_requires_lane_width():
+    m = ising.random_layered_model(n=4, L=2 * LANES, seed=0)
+    with pytest.raises(ValueError, match="V=128"):
+        engine.SweepEngine.build(m, rung="cb", backend="pallas", V=4)
+
+
+# -----------------------------------------------------------------------------
+# Serve determinism: solo == packed on the colored rung.
+# -----------------------------------------------------------------------------
+
+
+def test_cb_solo_equals_packed_serve():
+    m = ising.random_layered_model(n=5, L=8, seed=1, beta=1.0)
+    mixed = [(10, 3), (11, 7), (12, 5), (13, 4)]
+    packed = SampleServer(m, slots=3, chunk_sweeps=2, rung="cb", backend="jnp", V=4)
+    jobs = [AnnealJob.constant(seed=s, sweeps=b, beta=1.0) for s, b in mixed]
+    for j in jobs:
+        packed.submit(j)
+    by_jid = {r.jid: r for r in packed.drain()}
+    for (s, b), job in zip(mixed, jobs):
+        solo = SampleServer(m, slots=1, chunk_sweeps=5, rung="cb", backend="jnp", V=4)
+        solo.submit(AnnealJob.constant(seed=s, sweeps=b, beta=1.0))
+        (r_solo,) = solo.drain()
+        np.testing.assert_array_equal(r_solo.spins, by_jid[job.jid].spins)
+        assert r_solo.energy == by_jid[job.jid].energy
+
+
+# -----------------------------------------------------------------------------
+# Equilibrium statistics: cb and a4 sample the same Boltzmann distribution.
+# -----------------------------------------------------------------------------
+
+
+def _equilibrium_stats(m, rung, *, batch, burn, chunks, chunk_sweeps, seed):
+    eng = engine.SweepEngine.build(m, rung=rung, backend="jnp", batch=batch, V=4)
+    carry = eng.run(eng.init_carry(seed=seed), burn)
+    e_samples = np.empty((chunks, batch))
+    m_samples = np.empty((chunks, batch))
+    for c in range(chunks):
+        carry = eng.run(carry, chunk_sweeps)
+        spins = eng.spins_flat(carry)
+        e_samples[c] = observables.energies(m, spins)
+        m_samples[c] = np.abs(observables.magnetization(spins))
+    # Replica means are independent chains -> a clean standard error.
+    e_rep, m_rep = e_samples.mean(axis=0), m_samples.mean(axis=0)
+    return (
+        e_rep.mean(), e_rep.std(ddof=1) / np.sqrt(batch),
+        m_rep.mean(), m_rep.std(ddof=1) / np.sqrt(batch),
+    )
+
+
+def test_cb_equilibrium_matches_a4():
+    """Seeded statistical check: mean equilibrium energy and |m| at fixed
+    beta agree between the colored and sequential chains within combined
+    standard errors (they sample the same Boltzmann distribution)."""
+    m = ising.random_layered_model(n=6, L=16, seed=9, beta=0.45)
+    kw = dict(batch=12, burn=300, chunks=25, chunk_sweeps=20)
+    e4, se4, m4, sm4 = _equilibrium_stats(m, "a4", seed=1, **kw)
+    ec, sec, mc, smc = _equilibrium_stats(m, "cb", seed=2, **kw)
+    e_tol = 4.0 * np.hypot(se4, sec)
+    m_tol = 4.0 * np.hypot(sm4, smc)
+    assert abs(e4 - ec) < e_tol, (e4, ec, e_tol)
+    assert abs(m4 - mc) < m_tol, (m4, mc, m_tol)
+    # The tolerance itself must be meaningfully tight vs the energy scale.
+    assert e_tol < 0.08 * abs(e4)

@@ -178,6 +178,66 @@ def test_serve_pallas_equals_jnp():
 
 
 # -----------------------------------------------------------------------------
+# Adaptive chunk sizing.
+# -----------------------------------------------------------------------------
+
+
+def test_adaptive_chunks_bounded_jit_cache():
+    """chunk_sweeps="adaptive" picks every launch's chunk from the fixed
+    power-of-two menu — even when segment boundaries clamp it — so the
+    number of distinct compiled run executables is bounded by the menu
+    size regardless of job budgets or queue depth."""
+    srv = _server(slots=2, chunk_sweeps="adaptive")
+    # Awkward budgets/segments that a naive min(chunk, remaining) would
+    # turn into arbitrary chunk sizes (5, 3, 7, ...).
+    budgets = [5, 7, 13, 9, 3, 11, 6]
+    for i, b in enumerate(budgets):
+        srv.submit(AnnealJob.constant(seed=100 + i, sweeps=b, beta=1.0))
+    srv.submit(AnnealJob(seed=50, schedule=[(5, 0.4), (7, 0.9), (3, 1.4)]))
+    results = srv.drain()
+    assert len(results) == len(budgets) + 1
+    menu = set(srv._chunker.menu)
+    assert set(srv.launch_chunks) <= menu
+    assert srv.stats()["distinct_chunks"] <= len(menu)
+    assert srv._chunker.per_sweep_ewma is not None  # costs were measured
+
+
+def test_adaptive_chunks_results_bit_equal_static():
+    """Chunk size never changes physics: an adaptively-chunked job equals
+    the same job under the static knob, bit for bit."""
+    srv_a = _server(slots=1, chunk_sweeps="adaptive")
+    srv_s = _server(slots=1, chunk_sweeps=3)
+    for srv in (srv_a, srv_s):
+        srv.submit(AnnealJob.constant(seed=21, sweeps=11, beta=0.9))
+    (ra,), (rs,) = srv_a.drain(), srv_s.drain()
+    np.testing.assert_array_equal(ra.spins, rs.spins)
+    assert ra.energy == rs.energy
+
+
+def test_adaptive_chunker_policy():
+    from repro.serve_mc import AdaptiveChunker
+
+    ch = AdaptiveChunker(target_launch_s=0.1, max_chunk=64, init_chunk=8)
+    assert ch.menu == (1, 2, 4, 8, 16, 32, 64)
+    assert ch.floor_to_menu(7) == 4 and ch.floor_to_menu(64) == 64
+    assert ch.floor_to_menu(0) == 1  # never below the smallest chunk
+    # Before any measurement: init chunk, clamped by segment boundary.
+    assert ch.propose(queue_depth=0, segment_bound=100) == 8
+    assert ch.propose(queue_depth=0, segment_bound=5) == 4
+    # The FIRST observation at a chunk size is the jit compile; it must be
+    # discarded or the policy would collapse to chunk=1 during warm-up.
+    ch.observe(chunk=8, launch_s=3.0)  # compile -> ignored
+    assert ch.per_sweep_ewma is None
+    assert ch.propose(queue_depth=0, segment_bound=1000) == 8
+    # Cheap warm launches -> grow toward the latency target; queue shrinks.
+    ch.observe(chunk=8, launch_s=0.008)  # 1 ms/sweep -> target 100 sweeps
+    assert ch.propose(queue_depth=0, segment_bound=1000) == 64  # menu cap
+    assert ch.propose(queue_depth=9, segment_bound=1000) <= 8
+    with pytest.raises(ValueError, match="chunk_sweeps"):
+        _server(slots=1, chunk_sweeps="sometimes")
+
+
+# -----------------------------------------------------------------------------
 # Observables.
 # -----------------------------------------------------------------------------
 
