@@ -1,10 +1,13 @@
 """Sampling-as-a-service: one resident engine, many users' jobs.
 
 Submits a mixed workload to a `SampleServer` — constant-temperature
-sampling jobs, an annealing ramp, and a whole parallel-tempering ladder
-as one multi-slot job — and drains it.  Every chunk of sweeps advances
-ALL resident jobs as one batched launch; jobs retire and admit between
-chunks (continuous batching, DESIGN.md §Service).
+sampling jobs (one over a tenant's OWN spin-glass instance), an annealing
+ramp, and a whole parallel-tempering ladder as one multi-slot job — and
+drains it.  Every chunk of sweeps advances ALL resident jobs as one
+batched launch; jobs retire and admit between chunks (continuous
+batching, DESIGN.md §Service / §Multi-tenancy).  Sweeps run the
+graph-colored "cb" rung, the serving default (same equilibrium as the
+paper's sequential order, whole-lattice vector updates per sweep).
 
   PYTHONPATH=src python examples/annealing_service.py
 """
@@ -19,13 +22,21 @@ from repro.serve_mc import AnnealJob, PTJob, SampleServer
 
 def main():
     model = ising.random_layered_model(n=12, L=16, seed=3, beta=1.2)
-    server = SampleServer(model, slots=6, chunk_sweeps=4, backend="jnp", V=4)
+    server = SampleServer(model, slots=6, chunk_sweeps=4, backend="jnp", V=4,
+                          rung="cb", multi_tenant=True)
 
     print(f"model: {model.num_spins} spins; server: {server.slots} slots")
-    # Three users sampling at their own temperatures...
-    for user, (seed, beta) in enumerate([(10, 0.8), (11, 1.2), (12, 1.6)]):
-        jid = server.submit(AnnealJob.constant(seed=seed, sweeps=24, beta=beta))
-        print(f"  submitted job {jid}: constant beta={beta}")
+    # Three users sampling at their own temperatures — one of them over
+    # their OWN instance (same lattice, different couplings/fields):
+    tenant_model = ising.reseed_couplings(model, seed=42)
+    for user, (seed, beta, m_user) in enumerate(
+        [(10, 0.8, None), (11, 1.2, tenant_model), (12, 1.6, None)]
+    ):
+        jid = server.submit(
+            AnnealJob.constant(seed=seed, sweeps=24, beta=beta, model=m_user)
+        )
+        tag = " (own model)" if m_user is not None else ""
+        print(f"  submitted job {jid}: constant beta={beta}{tag}")
     # ...one annealing from hot to cold...
     jid = server.submit(
         AnnealJob.ramp(seed=20, beta_start=0.3, beta_end=2.0, steps=6,

@@ -40,6 +40,13 @@ Both paths evaluate the identical twist -> temper -> 24-bit-float pipeline
 on the identical per-replica state columns, so jnp and Pallas(interpret)
 runs are bit-exact (tested in tests/test_engine.py).
 
+MULTI-TENANT engines (`SweepEngine.build_multi([m0, m1, ...])`) serve one
+model PER SLOT in the same fused launch: coupling/field tables are
+promoted from closure-captured constants to batched ``[B, ...]`` kernel
+inputs (`slot_tables`), with topology (``space_nbr``) shared across slots.
+Homogeneous multi == single-model engine bit for bit; see DESIGN.md
+§Multi-tenancy and the slot-table APIs below.
+
 Adding a backend (TPU non-interpret, Triton/GPU, ...) is a registration:
 
     register_backend("mybackend", builder)
@@ -69,6 +76,8 @@ FLAT_RUNGS = ("a1", "a2")
 LANE_RUNGS = ("a3", "a4", "cb")
 #: Rungs the Pallas backend implements (fully-vectorized lane layouts).
 PALLAS_RUNGS = ("a4", "cb")
+#: Rungs the multi-tenant (per-slot coupling tables) path implements.
+MULTI_RUNGS = ("a4", "cb")
 
 #: Default exp flavour per rung (the paper's A.1 uses exact exp; every
 #: later rung uses the bit-trick fastexp).  "cb" is the graph-colored
@@ -105,10 +114,50 @@ def lane_seeds(batch: int, V: int, seed: int) -> np.ndarray:
 
 
 # -----------------------------------------------------------------------------
+# Model-table helpers shared by the single- and multi-model construction paths.
+# -----------------------------------------------------------------------------
+
+
+def check_same_topology(base: ising.LayeredModel, other: ising.LayeredModel,
+                        what: str = "model") -> None:
+    """Multi-tenant slots share ONE lattice: same (n, L) lane shape and the
+    identical ``space_nbr`` neighbour structure (couplings/fields may
+    differ per slot — the neighbour tables, and for the colored rung the
+    row coloring, are common engine structure)."""
+    if other.n != base.n or other.L != base.L:
+        raise ValueError(
+            f"{what}: lane shape (n={other.n}, L={other.L}) differs from the "
+            f"engine's (n={base.n}, L={base.L})"
+        )
+    if other.space_nbr.shape != base.space_nbr.shape or not np.array_equal(
+        other.space_nbr, base.space_nbr
+    ):
+        raise ValueError(
+            f"{what}: multi-tenant slots share one lattice topology; "
+            "space_nbr differs from the engine's base model"
+        )
+
+
+def _coupling_tables(model: ising.LayeredModel) -> dict:
+    """The PER-SLOT tables of the multi-tenant path: everything that may
+    differ between models sharing a topology.  Doubled variants feed the
+    sequential sweeps, undoubled ones the colored recompute and energy
+    evaluation — identical expressions to the single-model `build`."""
+    return dict(
+        h=jnp.asarray(model.h, f32),
+        base_J=jnp.asarray(model.space_J, f32),
+        tau_J=jnp.asarray(model.tau_J, f32),
+        base_J2=jnp.asarray(2.0 * model.space_J, f32),
+        tau_J2=jnp.asarray(2.0 * model.tau_J, f32),
+    )
+
+
+# -----------------------------------------------------------------------------
 # Backend registry.
 # -----------------------------------------------------------------------------
 
 _BACKENDS: dict[str, Callable[["SweepEngine"], Callable]] = {}
+_MULTI_BACKENDS: dict[str, Callable[["SweepEngine"], Callable]] = {}
 
 
 def register_backend(name: str, builder: Callable[["SweepEngine"], Callable]) -> None:
@@ -119,6 +168,20 @@ def register_backend(name: str, builder: Callable[["SweepEngine"], Callable]) ->
     must be jit-traceable with ``num_sweeps`` static.
     """
     _BACKENDS[name] = builder
+
+
+def register_multi_backend(
+    name: str, builder: Callable[["SweepEngine"], Callable]
+) -> None:
+    """Register the multi-tenant flavour of a backend:
+    ``builder(engine) -> fn(carry, slot_tables, num_sweeps) -> carry``.
+
+    Unlike the single-model builder, coupling tables are NOT closed over:
+    they arrive per call as a pytree of ``[B, ...]`` per-slot arrays
+    (`engine.slot_tables`), so one compiled executable serves any mix of
+    models sharing the engine's topology.
+    """
+    _MULTI_BACKENDS[name] = builder
 
 
 def backends() -> tuple[str, ...]:
@@ -139,6 +202,8 @@ class SweepEngine:
         interpret: bool | None,
         tables: dict,
         replica_tile: int | None = None,
+        models: tuple | None = None,
+        slot_tables: dict | None = None,
     ):
         self.model = model
         self.rung = rung
@@ -150,10 +215,27 @@ class SweepEngine:
         self.tables = tables
         self.replica_tile = replica_tile
         self.rows = tables.get("rows")  # lane rungs only
-        builder = _BACKENDS[backend]
-        self._run_jit = jax.jit(builder(self), static_argnums=(1,))
+        # Multi-tenant state (`build_multi`): per-slot models and their
+        # batched coupling tables, fed to the run jit as ARGUMENTS so one
+        # executable serves any model mix sharing the engine's topology.
+        self.multi = models is not None
+        self.models = models
+        self.slot_tables = slot_tables
+        if self.multi:
+            builder = _MULTI_BACKENDS[backend]
+            self._run_jit = jax.jit(builder(self), static_argnums=(2,))
+        else:
+            builder = _BACKENDS[backend]
+            self._run_jit = jax.jit(builder(self), static_argnums=(1,))
         self._splice_jit = None  # built lazily on first splice_slot
         self._extract_jit = None
+        self._splice_tables_jit = None
+        self._extract_tables_jit = None
+        # Per-model slot-table cache: admission is on the serving fast
+        # path and a server's tenant set recurs, so a model's tables are
+        # uploaded once, not per admit.  Models are kept strongly
+        # referenced so a dead id can never alias a new model.
+        self._slot_tables_cache: dict[int, tuple] = {}
 
     # -- construction ---------------------------------------------------------
 
@@ -195,21 +277,40 @@ class SweepEngine:
                 targets, J2 = ising.flat_arrays(model)
                 tables.update(targets=jnp.asarray(targets), J2=jnp.asarray(J2))
         else:
-            tables["rows"] = reorder.check_lane_shape(model.n, model.L, V)
-            tables.update(
-                base_nbr=jnp.asarray(model.space_nbr),
-                base_J2=jnp.asarray(2.0 * model.space_J),
-                tau_J2=jnp.asarray(2.0 * model.tau_J),
-                # Undoubled couplings + fields, for consumers that evaluate
-                # energies over the lane layout (e.g. tempering swaps).
-                base_J=jnp.asarray(model.space_J),
-                tau_J=jnp.asarray(model.tau_J),
-                h=jnp.asarray(model.h),
-            )
-            if rung == "cb":
-                # Host-numpy gather tables; both backends close over them
-                # as trace-time constants.
-                tables["classes"] = reorder.colored_classes(model, V)
+            tables.update(cls._lane_tables(model, rung, V))
+        cls._validate_backend_opts(rung, backend, V, batch, replica_tile)
+        return cls(
+            model, rung, backend, batch, V, exp_flavor, interpret, tables,
+            replica_tile,
+        )
+
+    @staticmethod
+    def _lane_tables(model: ising.LayeredModel, rung: str, V: int) -> dict:
+        """Shared lane-rung tables (identical in single- and multi-model
+        construction; in multi mode the coupling entries are the base
+        model's and serve only structure/energy defaults — per-slot
+        couplings live in `slot_tables`)."""
+        tables: dict = {"rows": reorder.check_lane_shape(model.n, model.L, V)}
+        tables.update(
+            base_nbr=jnp.asarray(model.space_nbr),
+            base_J2=jnp.asarray(2.0 * model.space_J),
+            tau_J2=jnp.asarray(2.0 * model.tau_J),
+            # Undoubled couplings + fields, for consumers that evaluate
+            # energies over the lane layout (e.g. tempering swaps).
+            base_J=jnp.asarray(model.space_J),
+            tau_J=jnp.asarray(model.tau_J),
+            h=jnp.asarray(model.h),
+        )
+        if rung == "cb":
+            # Host-numpy gather tables; both backends close over them
+            # as trace-time constants.
+            tables["classes"] = reorder.colored_classes(model, V)
+        return tables
+
+    @staticmethod
+    def _validate_backend_opts(
+        rung: str, backend: str, V: int, batch: int, replica_tile: int | None
+    ) -> None:
         if backend == "pallas":
             if rung not in PALLAS_RUNGS:
                 raise ValueError(
@@ -228,9 +329,59 @@ class SweepEngine:
                 )
         elif replica_tile is not None:
             raise ValueError("replica_tile is a pallas-backend knob")
+
+    @classmethod
+    def build_multi(
+        cls,
+        models,
+        rung: str = "a4",
+        backend: str = "jnp",
+        *,
+        V: int = 4,
+        exp_flavor: str | None = None,
+        interpret: bool | None = None,
+        replica_tile: int | None = None,
+    ) -> "SweepEngine":
+        """A MULTI-TENANT engine: one slot per entry of ``models``, each
+        slot sweeping its own model's couplings/fields in the same fused
+        launch (the "many independent lattices per kernel" strategy of
+        Weigel & Yavors'kii applied to heterogeneous instances).
+
+        All models must share one lattice: same ``(n, L)`` lane shape and
+        identical ``space_nbr`` (`check_same_topology`) — neighbour
+        structure and, for the colored rung, the row coloring are common
+        engine structure, while ``h``/``space_J``/``tau_J`` ride per slot
+        as batched kernel inputs (`slot_tables`).  With B copies of one
+        model this path is bit-identical to the single-model engine
+        (tests/test_multi_tenant.py), which is what lets the serving layer
+        switch to it unconditionally.
+        """
+        models = tuple(models)
+        if not models:
+            raise ValueError("build_multi needs at least one model")
+        base = models[0]
+        for i, mm in enumerate(models[1:], 1):
+            check_same_topology(base, mm, what=f"models[{i}]")
+        if rung not in MULTI_RUNGS:
+            raise ValueError(
+                f"multi-tenant engines implement rungs {MULTI_RUNGS}; "
+                f"got rung={rung!r}"
+            )
+        if backend not in _MULTI_BACKENDS:
+            raise ValueError(
+                f"no multi-tenant flavour registered for backend {backend!r}; "
+                f"registered: {tuple(sorted(_MULTI_BACKENDS))}"
+            )
+        batch = len(models)
+        exp_flavor = exp_flavor or DEFAULT_EXP[rung]
+        tables = cls._lane_tables(base, rung, V)
+        cls._validate_backend_opts(rung, backend, V, batch, replica_tile)
+        slot_tables = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[_coupling_tables(mm) for mm in models]
+        )
         return cls(
-            model, rung, backend, batch, V, exp_flavor, interpret, tables,
-            replica_tile,
+            base, rung, backend, batch, V, exp_flavor, interpret, tables,
+            replica_tile, models=models, slot_tables=slot_tables,
         )
 
     # -- lifecycle ------------------------------------------------------------
@@ -245,11 +396,23 @@ class SweepEngine:
 
         ``spins`` may be None (per-replica random init from ``seed``), one
         flat (N,) configuration (replicated), or a (B, N) stack.  ``betas``
-        defaults to the model beta on every replica.
+        defaults to the model beta on every replica (each slot's OWN
+        model's beta on a multi-tenant engine); effective fields are
+        likewise computed from each slot's own model.
         """
         m, B = self.model, self.batch
+        # Slots whose tables were raw-spliced (model None) fall back to the
+        # base model for spin/field/beta init.
+        slot_models = (
+            tuple(mm if mm is not None else m for mm in self.models)
+            if self.multi
+            else (m,) * B
+        )
         if spins is None:
-            spin_list = [ising.init_spins(m, seed=seed * 1000 + b) for b in range(B)]
+            spin_list = [
+                ising.init_spins(mm, seed=seed * 1000 + b)
+                for b, mm in enumerate(slot_models)
+            ]
         else:
             spins = np.asarray(spins, np.float32)
             if spins.ndim == 1:
@@ -259,18 +422,24 @@ class SweepEngine:
                     raise ValueError(f"spins batch {spins.shape[0]} != {B}")
                 spin_list = list(spins)
         if betas is None:
-            betas = np.full((B,), m.beta, np.float32)
+            betas = np.asarray([mm.beta for mm in slot_models], np.float32)
         betas = jnp.asarray(betas, f32)
 
         if self.rung in FLAT_RUNGS:
-            states = [metropolis.make_flat_state(m, sp) for sp in spin_list]
+            states = [
+                metropolis.make_flat_state(mm, sp)
+                for mm, sp in zip(slot_models, spin_list)
+            ]
             # One scalar generator per replica, seeds scrambled exactly like
             # the lane path (consecutive seeds would give nearby-seeded runs
             # bit-identical streams); batch=1 reduces to mt_init(seed), the
             # historical scalar seeding.
             rng = mt.mt_init(lane_seeds(B, 1, seed))
         else:
-            states = [metropolis.make_lane_state(m, sp, self.V) for sp in spin_list]
+            states = [
+                metropolis.make_lane_state(mm, sp, self.V)
+                for mm, sp in zip(slot_models, spin_list)
+            ]
             rng = mt.mt_init(lane_seeds(B, self.V, seed))
         stacked = [jnp.stack([s[i] for s in states]) for i in range(3)]
         return SweepCarry(*stacked, betas=betas, rng=rng)
@@ -284,7 +453,13 @@ class SweepEngine:
         resident batch in fixed-size chunks (with occasional shorter
         remainder chunks at schedule boundaries), so steady-state serving
         is one cached fused launch per chunk.
+
+        On a multi-tenant engine the current per-slot coupling tables ride
+        along as jit ARGUMENTS (same shapes always, so still one cached
+        executable per chunk size, whatever models occupy the slots).
         """
+        if self.multi:
+            return self._run_jit(carry, self.slot_tables, int(num_sweeps))
         return self._run_jit(carry, int(num_sweeps))
 
     def run_fn(self, num_sweeps: int) -> Callable[[SweepCarry], SweepCarry]:
@@ -294,6 +469,8 @@ class SweepEngine:
         the compile cache.
         """
         n = int(num_sweeps)
+        if self.multi:
+            return lambda carry: self._run_jit(carry, self.slot_tables, n)
         return lambda carry: self._run_jit(carry, n)
 
     # -- views ----------------------------------------------------------------
@@ -337,6 +514,7 @@ class SweepEngine:
         spins: np.ndarray | None = None,
         beta: float | None = None,
         rng_seeds: np.ndarray | None = None,
+        model: ising.LayeredModel | None = None,
     ) -> SweepCarry:
         """A single-slot (batch=1 shaped) carry for `splice_slot`.
 
@@ -346,8 +524,20 @@ class SweepEngine:
         overrides the per-lane seeds for callers that need a specific
         column block of a larger seeding plan (e.g. a tempering job whose
         replica b must reproduce ``lane_seeds(R, V, seed)[b*V:(b+1)*V]``).
+        ``model`` (multi-tenant engines only) computes the slot's effective
+        fields and default beta from a job-private model — splice its
+        coupling tables into the same slot (`set_slot_model`) or the carry
+        will be inconsistent with what the slot sweeps.
         """
-        m = self.model
+        if model is None:
+            m = self.model
+        else:
+            if not self.multi:
+                raise ValueError(
+                    "per-slot models need a multi-tenant engine (build_multi)"
+                )
+            check_same_topology(self.model, model)
+            m = model
         if spins is None:
             spins = ising.init_spins(m, seed=seed * 1000)
         else:
@@ -432,6 +622,113 @@ class SweepEngine:
         idx = jnp.asarray(np.asarray(slots, np.int32))
         vals = jnp.asarray(betas, f32)
         return carry._replace(betas=carry.betas.at[idx].set(vals))
+
+    # -- per-slot model tables (the multi-tenant admit API) --------------------
+    #
+    # On a multi-tenant engine every slot additionally owns a row of the
+    # batched coupling tables (`slot_tables`).  These mirror the slot-carry
+    # splice/extract APIs: one jitted dynamic-slice call each, slot index
+    # traced so all slots share one executable.  Unlike the carry (which
+    # the scheduler threads through `run`), the tables live ON the engine —
+    # `run` reads `self.slot_tables` — so the splice-side APIs mutate
+    # engine state and admission is simply `set_slot_model(b, job_model)`.
+
+    def check_model(self, model: ising.LayeredModel) -> None:
+        """Raise unless ``model`` is admissible in this engine's slots."""
+        check_same_topology(self.model, model)
+
+    #: Bound on the per-model table cache; a tenant set larger than this
+    #: simply re-uploads (correctness is unaffected, only admit latency).
+    SLOT_TABLES_CACHE_MAX = 64
+
+    def slot_tables_for(self, model: ising.LayeredModel) -> dict:
+        """Single-slot (leading dim 1) coupling tables for `splice_slot_tables`.
+
+        Cached per model object: repeated admissions of the same tenant
+        (the steady state of a multi-tenant server) skip the host-to-device
+        table upload entirely.
+        """
+        hit = self._slot_tables_cache.get(id(model))
+        if hit is not None and hit[0] is model:
+            return hit[1]
+        self.check_model(model)
+        tabs = jax.tree_util.tree_map(lambda x: x[None], _coupling_tables(model))
+        if len(self._slot_tables_cache) >= self.SLOT_TABLES_CACHE_MAX:
+            self._slot_tables_cache.clear()
+        self._slot_tables_cache[id(model)] = (model, tabs)
+        return tabs
+
+    def splice_slot_tables(self, b: int, slot: dict) -> None:
+        """Write single-slot coupling tables into slot ``b`` (multi only).
+
+        Pure data movement over every table leaf — bit-exact by
+        construction, like `splice_slot`.  The slot's recorded model
+        (`model_of`) becomes None (unknown provenance): a raw table
+        splice carries no model object, and leaving a stale entry would
+        let a later `set_slot_model` wrongly no-op on its identity check.
+        Callers that know the model should use `set_slot_model`, which
+        records it.
+        """
+        if not self.multi:
+            raise ValueError("splice_slot_tables needs a multi-tenant engine")
+        if not 0 <= b < self.batch:
+            raise ValueError(f"slot {b} out of range for batch {self.batch}")
+        self.models = self.models[:b] + (None,) + self.models[b + 1 :]
+        if self._splice_tables_jit is None:
+
+            def _splice(tabs, b, slot):
+                return jax.tree_util.tree_map(
+                    lambda dst, src: lax.dynamic_update_slice_in_dim(
+                        dst, src, b, axis=0
+                    ),
+                    tabs,
+                    slot,
+                )
+
+            self._splice_tables_jit = jax.jit(_splice)
+        self.slot_tables = self._splice_tables_jit(
+            self.slot_tables, jnp.int32(b), slot
+        )
+
+    def extract_slot_tables(self, b: int) -> dict:
+        """Slot ``b``'s coupling tables as a single-slot pytree (the exact
+        inverse of `splice_slot_tables`; round-trips bit-exactly)."""
+        if not self.multi:
+            raise ValueError("extract_slot_tables needs a multi-tenant engine")
+        if not 0 <= b < self.batch:
+            raise ValueError(f"slot {b} out of range for batch {self.batch}")
+        if self._extract_tables_jit is None:
+
+            def _extract(tabs, b):
+                return jax.tree_util.tree_map(
+                    lambda src: lax.dynamic_slice_in_dim(src, b, 1, axis=0), tabs
+                )
+
+            self._extract_tables_jit = jax.jit(_extract)
+        return self._extract_tables_jit(self.slot_tables, jnp.int32(b))
+
+    def set_slot_model(self, b: int, model: ising.LayeredModel) -> None:
+        """Admit ``model`` into slot ``b``: splice its coupling tables and
+        record it as the slot's model (`model_of`).
+
+        A no-op when the slot already holds ``model`` (``models[b]``
+        records exactly what was last spliced), so admissions on the
+        common same-tenant path — every admission of a model-less job —
+        skip the table splice entirely.
+        """
+        if not self.multi:
+            raise ValueError("set_slot_model needs a multi-tenant engine")
+        if not 0 <= b < self.batch:
+            raise ValueError(f"slot {b} out of range for batch {self.batch}")
+        if self.models[b] is model:
+            return
+        self.splice_slot_tables(b, self.slot_tables_for(model))
+        self.models = self.models[:b] + (model,) + self.models[b + 1 :]
+
+    def model_of(self, b: int) -> ising.LayeredModel | None:
+        """The model slot ``b`` currently sweeps (None if its tables were
+        last written by a raw `splice_slot_tables`)."""
+        return self.models[b] if self.multi else self.model
 
 
 # -----------------------------------------------------------------------------
@@ -574,5 +871,132 @@ def _build_pallas(eng: SweepEngine) -> Callable:
     return run
 
 
+# -----------------------------------------------------------------------------
+# Multi-tenant builders: identical sweep math, coupling tables as ARGUMENTS.
+#
+# The per-rung sweep functions already take their tables as parameters
+# (core/metropolis.py), so the multi flavour is the same function vmapped
+# over one extra axis: per-slot tables of shape [B, ...] map alongside the
+# carry rows.  With B identical table copies every per-slot op is the same
+# elementwise/gather op on the same values as the single-model path, which
+# is why homogeneous multi-tenant serving is bit-identical to `build`
+# (tests/test_multi_tenant.py) — there is no "almost the same" float path.
+# -----------------------------------------------------------------------------
+
+
+def _build_jnp_multi(eng: SweepEngine) -> Callable:
+    m, t = eng.model, eng.tables
+    exp_flavor = eng.exp_flavor
+    count, B, V = t["rows"], eng.batch, eng.V
+
+    if eng.rung == "cb":
+        classes = t["classes"]
+        exp_fn = metropolis.EXP_FNS[exp_flavor]
+
+        def flip_one(spins, beta, u, *cls_tabs):
+            # Reassemble per-replica classes from the pre-gathered coupling
+            # slices; structural leaves stay trace-time constants.
+            bound = metropolis.bind_class_tables(classes, cls_tabs)
+            return metropolis.colored_flip_spins(spins, u, beta, bound, exp_fn)
+
+        def run_cb(carry: SweepCarry, tabs: dict, num_sweeps: int) -> SweepCarry:
+            h_b, bJ_b, tJ_b = tabs["h"], tabs["base_J"], tabs["tau_J"]
+            # Gathered ONCE per run — loop-invariant, must not ride the
+            # per-sweep scan (same values as the single-model constants,
+            # hence still bit-identical).
+            cls_tabs_b = metropolis.class_coupling_slices(
+                classes, h_b, bJ_b, tJ_b, m.n
+            )
+
+            def sweep_once(sc, _):
+                spins, rng = sc
+                rng, u = mt.mt_uniforms_count(rng, count)
+                u = u.reshape(count, B, V).transpose(1, 0, 2)
+                spins = jax.vmap(flip_one)(
+                    spins, carry.betas, u, *cls_tabs_b
+                )
+                return (spins, rng), None
+
+            (spins, rng), _ = lax.scan(
+                sweep_once, (carry.spins, carry.rng), None, length=num_sweeps
+            )
+            hs, ht = jax.vmap(
+                lambda sp, h, bJ, tJ: metropolis.lane_h_eff(
+                    sp, h, t["base_nbr"], bJ, tJ, m.n
+                )
+            )(spins, h_b, bJ_b, tJ_b)
+            return SweepCarry(spins, hs, ht, carry.betas, rng)
+
+        return run_cb
+
+    def one(spins, hs, ht, beta, u, j2, tau2):
+        return metropolis.sweep_lane(
+            metropolis.LaneState(spins, hs, ht),
+            t["base_nbr"], j2, tau2, u, beta, m.n, exp_flavor,
+        )
+
+    def run(carry: SweepCarry, tabs: dict, num_sweeps: int) -> SweepCarry:
+        j2_b, tau2_b = tabs["base_J2"], tabs["tau_J2"]
+
+        def sweep_once(c: SweepCarry, _):
+            rng, u = mt.mt_uniforms_count(c.rng, count)
+            u = u.reshape(count, B, V).transpose(1, 0, 2)  # (B, rows, V)
+            st = jax.vmap(one)(
+                c.spins, c.h_space, c.h_tau, c.betas, u, j2_b, tau2_b
+            )
+            return SweepCarry(st.spins, st.h_space, st.h_tau, c.betas, rng), None
+
+        return lax.scan(sweep_once, carry, None, length=num_sweeps)[0]
+
+    return run
+
+
+def _build_pallas_multi(eng: SweepEngine) -> Callable:
+    from repro.kernels import ops
+
+    m, t = eng.model, eng.tables
+
+    if eng.rung == "cb":
+        colored_fn = ops.make_colored_multisweep_multi(
+            t["classes"],
+            m.space_nbr,
+            n=m.n,
+            exp_flavor=eng.exp_flavor,
+            interpret=eng.interpret,
+            replica_tile=eng.replica_tile,
+        )
+
+        def run_cb(carry: SweepCarry, tabs: dict, num_sweeps: int) -> SweepCarry:
+            spins, hs, ht, rng = colored_fn(
+                carry.spins, carry.rng, carry.betas,
+                tabs["h"], tabs["base_J"], tabs["tau_J"], num_sweeps,
+            )
+            return SweepCarry(spins, hs, ht, carry.betas, rng)
+
+        return run_cb
+
+    def run(carry: SweepCarry, tabs: dict, num_sweeps: int) -> SweepCarry:
+        spins, hs, ht, rng = ops.metropolis_multisweep_multi(
+            carry.spins,
+            carry.h_space,
+            carry.h_tau,
+            carry.rng,
+            t["base_nbr"],
+            tabs["base_J2"],
+            tabs["tau_J2"],
+            carry.betas,
+            n=m.n,
+            num_sweeps=num_sweeps,
+            exp_flavor=eng.exp_flavor,
+            interpret=eng.interpret,
+            replica_tile=eng.replica_tile,
+        )
+        return SweepCarry(spins, hs, ht, carry.betas, rng)
+
+    return run
+
+
 register_backend("jnp", _build_jnp)
 register_backend("pallas", _build_pallas)
+register_multi_backend("jnp", _build_jnp_multi)
+register_multi_backend("pallas", _build_pallas_multi)

@@ -11,6 +11,12 @@ these functions (``backend="jnp"``) or to the fused Pallas kernel
 §Engine for the architecture and §RNG fusion for where uniforms are
 generated per backend and why the two backends stay bit-exact.
 
+Every sweep function takes its model tables (couplings, fields,
+neighbours) as ARGUMENTS rather than closing over them — the property the
+multi-tenant engine path relies on: the same function body serves one
+model (tables broadcast) or B different models (tables vmapped per slot,
+`SweepEngine.build_multi`) with bit-identical per-slot floats.
+
 Every implementation level of the paper is reproduced with the *same
 semantics* expressed over its own memory layout, so rungs can be compared
 both for bit-exactness (same exp flavour, same uniforms) and for wall-clock
@@ -294,6 +300,48 @@ def lane_h_eff(
     up = jnp.concatenate([s[1:], jnp.roll(s[:1], -1, axis=-1)], axis=0)
     ht = tau_J[None, :, None] * (down + up)
     return hs.reshape(rows, V), ht.reshape(rows, V)
+
+
+def class_coupling_slices(classes, h_b, space_J_b, tau_J_b, n: int):
+    """Pre-gather each class's coupling/field tables from BATCHED
+    ``[B, n, ...]`` per-slot site tables (the multi-tenant path).
+
+    Returns a flat list ``[h_0, space_J_0, tau_J_0, h_1, ...]`` of
+    ``[B, k, ...]`` arrays, one triple per class.  Called ONCE per launch
+    — the slot tables are loop-invariant, so these gathers must not ride
+    the per-sweep loop — and consumed per replica via `bind_class_tables`
+    under the replica vmap.  Works with host numpy classes (trace-time
+    constants, jnp backend) and with traced leaves (inside the Pallas
+    kernel body) alike.
+    """
+    out = []
+    for cls in classes:
+        i = cls.rows % n  # row (p, i) holds site i of every lane's layer p
+        out += [h_b[:, i], space_J_b[:, i], tau_J_b[:, i]]
+    return out
+
+
+def bind_class_tables(classes, cls_tabs):
+    """Rebind structural color classes to one replica's coupling slices
+    (`class_coupling_slices` entries with the batch dim mapped away).
+
+    Keeps each class's structural gather tables (rows, neighbour targets,
+    tau sources, roll masks — a pure function of topology, shared by every
+    model in a multi-tenant engine) and replaces its ``h``/``space_J``/
+    ``tau_J`` leaves.  With the tables of the model the classes were
+    built from, the bound leaves equal the precomputed ones value for
+    value — which is what keeps the single-model and multi-model colored
+    paths bit-identical.  Shared verbatim by the jnp backend and the
+    Pallas kernel body, like `colored_flip_spins` itself.
+    """
+    return tuple(
+        cls._replace(
+            h=cls_tabs[3 * c],
+            space_J=cls_tabs[3 * c + 1],
+            tau_J=cls_tabs[3 * c + 2],
+        )
+        for c, cls in enumerate(classes)
+    )
 
 
 def colored_flip_spins(

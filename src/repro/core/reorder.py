@@ -19,6 +19,7 @@ width and plays the role of the paper's 32/128-way GPU memory coalescing
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Tuple
 
 import numpy as np
@@ -38,8 +39,14 @@ def check_lane_shape(n: int, L: int, V: int) -> int:
     return lpv * n  # rows
 
 
+@functools.lru_cache(maxsize=None)
 def flat_to_lane_perm(n: int, L: int, V: int) -> np.ndarray:
-    """perm[row * V + lane] = flat spin id (layer-major) occupying that slot."""
+    """perm[row * V + lane] = flat spin id (layer-major) occupying that slot.
+
+    Memoized (and returned read-only): the permutation is a pure function
+    of the lane shape, and rebuilding it sat on the serving admit fast
+    path — every `make_lane_state` of every job admission.
+    """
     rows = check_lane_shape(n, L, V)
     lpv = L // V
     perm = np.empty(rows * V, dtype=np.int64)
@@ -48,6 +55,7 @@ def flat_to_lane_perm(n: int, L: int, V: int) -> np.ndarray:
             l = v * lpv + p
             for i in range(n):
                 perm[(p * n + i) * V + v] = l * n + i
+    perm.setflags(write=False)
     return perm
 
 
@@ -94,6 +102,32 @@ def _greedy_color(adj: list[set]) -> np.ndarray:
             c += 1
         colors[v] = c
     return colors
+
+
+#: Memo of computed row colorings, keyed by the conflict graph's identity
+#: (lane shape + base adjacency bytes).  Heterogeneous models served
+#: together in one multi-tenant engine share a lattice topology and differ
+#: only in couplings/fields, so the (identical) coloring is computed once
+#: per lane shape and reused across models and engines.
+_PARTITION_CACHE: dict = {}
+
+
+def colored_partition(
+    space_nbr: np.ndarray, n: int, lpv: int
+) -> Tuple[np.ndarray, int]:
+    """Cached `color_rows`: one coloring per (lane shape, topology).
+
+    The coloring depends only on the base adjacency structure — never on
+    coupling values — so every model sharing ``space_nbr`` (e.g. disorder
+    realizations on one lattice, the multi-tenant serving case) gets the
+    SAME ``(colors, C)`` object back, making the class row-partition
+    trivially identical across the slots of a multi-model engine.
+    """
+    key = (n, lpv, np.asarray(space_nbr, np.int32).tobytes())
+    hit = _PARTITION_CACHE.get(key)
+    if hit is None:
+        hit = _PARTITION_CACHE[key] = color_rows(space_nbr, n, lpv)
+    return hit
 
 
 def color_rows(space_nbr: np.ndarray, n: int, lpv: int) -> Tuple[np.ndarray, int]:
@@ -149,7 +183,7 @@ def colored_classes(m: ising.LayeredModel, V: int) -> Tuple[ColorClass, ...]:
     """
     rows_total = check_lane_shape(m.n, m.L, V)
     n, lpv = m.n, rows_total // m.n
-    colors, C = color_rows(m.space_nbr, n, lpv)
+    colors, C = colored_partition(m.space_nbr, n, lpv)
     classes = []
     for c in range(C):
         rows_c = np.nonzero(colors == c)[0].astype(np.int32)

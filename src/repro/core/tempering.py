@@ -198,6 +198,20 @@ def energy_tables(eng: sweep_engine.SweepEngine):
     return t["base_nbr"], t["base_J"], t["tau_J"], t["h"]
 
 
+def model_energy_tables(m: ising.LayeredModel):
+    """(base_nbr, base_J, tau_J, h) built directly from a model — same
+    arrays `energy_tables` yields for that model's own engine.  For
+    consumers whose model is NOT the engine's (a multi-tenant `PTJob`
+    swapping over a job-private model); build once per job, not per round.
+    """
+    return (
+        jnp.asarray(m.space_nbr),
+        jnp.asarray(m.space_J),
+        jnp.asarray(m.tau_J),
+        jnp.asarray(m.h),
+    )
+
+
 def pt_round(
     eng: sweep_engine.SweepEngine,
     state: PTState,

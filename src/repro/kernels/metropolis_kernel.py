@@ -109,14 +109,15 @@ def _row_sweep(
     o_ht_ref,
     u,  # (rows, bt*128) f32 VALUE (not a ref) — uniforms for this sweep
     row_nbr_ref,  # (rows, SD) int32 absolute neighbour rows (_row_tables)
-    row_j2_ref,  # (rows, SD) f32 (pre-doubled)
-    row_tau2_ref,  # (rows, 1) f32 (pre-doubled)
+    row_j2_ref,  # (rows, SD) f32 (pre-doubled); (bt, rows, SD) if multi
+    row_tau2_ref,  # (rows, 1) f32 (pre-doubled); (bt, rows, 1) if multi
     beta,  # (bt, 1, 1) f32
     n: int,
     sd: int,
     rows: int,
     bt: int,
     exp_fn,
+    multi: bool = False,
 ):
     """One full sequential-order sweep over a tile of ``bt`` replicas.
 
@@ -126,6 +127,14 @@ def _row_sweep(
     per-row-gathered, so each step's index arithmetic is a single dynamic
     row load (first/last layer blocks still special-case the lane-rotated
     tau wrap, where the target row is an affine function of q).
+
+    ``multi=True`` is the multi-tenant flavour: the coupling tables carry
+    a leading replica-tile dim (each slot sweeps its own model), so the
+    j2/tau2 loads become per-replica ``(bt, 1, ·)`` values that broadcast
+    against ``smul`` exactly like the shared scalars do — with ``bt``
+    copies of one table the floats are bit-identical to the shared path.
+    The neighbour ROW table stays shared: multi-tenant slots share one
+    lattice topology (engine.check_same_topology).
     """
 
     def rmw(ref, row, contrib):
@@ -144,10 +153,18 @@ def _row_sweep(
         smul = s * mask
         pl.store(o_spins_ref, idx, s * (f32(1.0) - f32(2.0) * mask))
         nbr_row = pl.load(row_nbr_ref, (pl.ds(q, 1), slice(None)))  # (1, SD)
-        j2_row = pl.load(row_j2_ref, (pl.ds(q, 1), slice(None)))
-        for d in range(sd):  # static unroll over the sparse degree
-            rmw(o_hs_ref, nbr_row[0, d], -smul * j2_row[0, d])
-        tc = -smul * pl.load(row_tau2_ref, (pl.ds(q, 1), slice(None)))[0, 0]
+        if multi:
+            j2_row = pl.load(row_j2_ref, (slice(None), pl.ds(q, 1), slice(None)))
+            for d in range(sd):  # static unroll over the sparse degree
+                rmw(o_hs_ref, nbr_row[0, d], -smul * j2_row[:, :, d : d + 1])
+            tc = -smul * pl.load(
+                row_tau2_ref, (slice(None), pl.ds(q, 1), slice(None))
+            )  # (bt, 1, 1) per-replica tau coupling
+        else:
+            j2_row = pl.load(row_j2_ref, (pl.ds(q, 1), slice(None)))
+            for d in range(sd):  # static unroll over the sparse degree
+                rmw(o_hs_ref, nbr_row[0, d], -smul * j2_row[0, d])
+            tc = -smul * pl.load(row_tau2_ref, (pl.ds(q, 1), slice(None)))[0, 0]
         if wrap == -1:  # first layer block (q in [0, n)): down-link wraps
             rmw(o_ht_ref, rows - n + q, jnp.roll(tc, -1, axis=2))
             rmw(o_ht_ref, q + n, tc)
@@ -172,6 +189,7 @@ def _make_fused_body(
     num_sweeps: int,
     exp_flavor: str,
     host_uniforms: bool = False,
+    multi: bool = False,
 ):
     """Sequential-order sweep body over a TILE of ``bt`` replicas.
 
@@ -186,12 +204,14 @@ def _make_fused_body(
     ``host_uniforms=True`` is the DEPRECATED single-sweep flavour (uniforms
     arrive as an input ref, ``num_sweeps`` must be 1) kept for the
     launch-structure benchmark; it shares `_row_sweep` so no sweep math is
-    duplicated.
+    duplicated.  ``multi=True`` threads per-replica coupling tables (the
+    j2/tau2 refs gain a leading tile dim — see `_row_sweep`).
     """
     exp_fn = fx.EXP_FNS[exp_flavor]
 
     if host_uniforms:
         assert num_sweeps == 1, "host-uniform flavour is single-sweep only"
+        assert not multi, "host-uniform flavour has no multi-tenant variant"
 
         def u_body(
             spins_ref,  # (bt, rows, 128)
@@ -245,7 +265,7 @@ def _make_fused_body(
             _row_sweep(
                 o_spins_ref, o_hs_ref, o_ht_ref, u,
                 row_nbr_ref, row_j2_ref, row_tau2_ref,
-                beta, n, sd, rows, bt, exp_fn,
+                beta, n, sd, rows, bt, exp_fn, multi=multi,
             )
             return carry
 
@@ -308,6 +328,60 @@ def metropolis_sweep_kernel(
     return out
 
 
+def _fused_multisweep_call(
+    spins, h_space, h_tau, rng, row_nbr, row_j2, row_tau2, beta,
+    n: int, num_sweeps: int, exp_flavor: str, interpret: bool,
+    replica_tile: int | None, multi: bool,
+):
+    """The one launch configuration both fused sequential-order entries
+    share: tiles, specs, out shapes, and the `_make_fused_body` call.
+    ``multi`` only switches the j2/tau2 operands from shared ``(rows, ·)``
+    tables to per-tile ``(bt, rows, ·)`` blocks of ``[B, rows, ·]``
+    inputs — everything else is identical by construction, so the single-
+    and multi-tenant launch paths cannot diverge."""
+    B, rows, lanes = spins.shape
+    assert lanes == LANES, spins.shape
+    assert rng.shape == (mt.N, B * LANES), (rng.shape, B)
+    bt = B if replica_tile is None else replica_tile
+    if B % bt != 0:
+        raise ValueError(f"replica_tile {bt} must divide batch {B}")
+    sd = row_nbr.shape[-1]
+    blocks = -(-rows // mt.N)  # ceil
+    body = _make_fused_body(
+        n, sd, rows, bt, blocks, num_sweeps, exp_flavor, multi=multi
+    )
+    tile_spec = pl.BlockSpec((bt, rows, LANES), lambda g: (g, 0, 0))
+    rng_spec = pl.BlockSpec((mt.N, bt * LANES), lambda g: (0, g))
+    shared2d = lambda a: pl.BlockSpec(a.shape, lambda g: (0, 0))
+    if multi:
+        j2_spec = pl.BlockSpec((bt, rows, sd), lambda g: (g, 0, 0))
+        tau2_spec = pl.BlockSpec((bt, rows, 1), lambda g: (g, 0, 0))
+    else:
+        j2_spec, tau2_spec = shared2d(row_j2), shared2d(row_tau2)
+    return pl.pallas_call(
+        body,
+        out_shape=(
+            jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((mt.N, B * LANES), jnp.uint32),
+        ),
+        grid=(B // bt,),
+        in_specs=[
+            tile_spec,
+            tile_spec,
+            tile_spec,
+            rng_spec,
+            shared2d(row_nbr),
+            j2_spec,
+            tau2_spec,
+            pl.BlockSpec((bt, 1), lambda g: (g, 0)),
+        ],
+        out_specs=(tile_spec, tile_spec, tile_spec, rng_spec),
+        interpret=interpret,
+    )(spins, h_space, h_tau, rng, row_nbr, row_j2, row_tau2, beta)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("n", "num_sweeps", "exp_flavor", "interpret", "replica_tile"),
@@ -336,42 +410,55 @@ def metropolis_multisweep_kernel(
     so the resident working set can be sized to VMEM without changing the
     math: tiles are independent, bit-equal to the one-tile case.
     """
-    B, rows, lanes = spins.shape
-    assert lanes == LANES, spins.shape
-    assert rng.shape == (mt.N, B * LANES), (rng.shape, B)
-    bt = B if replica_tile is None else replica_tile
-    if B % bt != 0:
-        raise ValueError(f"replica_tile {bt} must divide batch {B}")
-    sd = base_nbr.shape[1]
-    blocks = -(-rows // mt.N)  # ceil
+    rows = spins.shape[1]
     row_nbr, row_j2, row_tau2 = _row_tables(base_nbr, base_J2, tau_J2, rows, n)
-    body = _make_fused_body(n, sd, rows, bt, blocks, num_sweeps, exp_flavor)
-    tile_spec = pl.BlockSpec((bt, rows, LANES), lambda g: (g, 0, 0))
-    rng_spec = pl.BlockSpec((mt.N, bt * LANES), lambda g: (0, g))
-    shared2d = lambda a: pl.BlockSpec(a.shape, lambda g: (0, 0))
-    out = pl.pallas_call(
-        body,
-        out_shape=(
-            jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
-            jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
-            jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
-            jax.ShapeDtypeStruct((mt.N, B * LANES), jnp.uint32),
-        ),
-        grid=(B // bt,),
-        in_specs=[
-            tile_spec,
-            tile_spec,
-            tile_spec,
-            rng_spec,
-            shared2d(row_nbr),
-            shared2d(row_j2),
-            shared2d(row_tau2),
-            pl.BlockSpec((bt, 1), lambda g: (g, 0)),
-        ],
-        out_specs=(tile_spec, tile_spec, tile_spec, rng_spec),
-        interpret=interpret,
-    )(spins, h_space, h_tau, rng, row_nbr, row_j2, row_tau2, beta)
-    return out
+    return _fused_multisweep_call(
+        spins, h_space, h_tau, rng, row_nbr, row_j2, row_tau2, beta,
+        n, num_sweeps, exp_flavor, interpret, replica_tile, multi=False,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "num_sweeps", "exp_flavor", "interpret", "replica_tile"),
+)
+def metropolis_multisweep_multi_kernel(
+    spins: jax.Array,  # (B, rows, 128) f32 in {-1,+1}
+    h_space: jax.Array,  # (B, rows, 128)
+    h_tau: jax.Array,  # (B, rows, 128)
+    rng: jax.Array,  # (624, B*128) uint32 interlaced MT19937 state
+    base_nbr: jax.Array,  # (n, SD) int32 — SHARED topology
+    base_J2_b: jax.Array,  # (B, n, SD) f32 — PER-SLOT couplings
+    tau_J2_b: jax.Array,  # (B, n, 1) f32 — PER-SLOT tau couplings
+    beta: jax.Array,  # (B, 1) f32
+    n: int,
+    num_sweeps: int,
+    exp_flavor: str = "fast",
+    interpret: bool = True,
+    replica_tile: int | None = None,
+):
+    """Multi-tenant flavour of `metropolis_multisweep_kernel`: the coupling
+    tables gain a leading replica dim and ride the replica grid as batched
+    kernel inputs, so one fused launch advances B slots each sweeping its
+    OWN model (same lattice topology — the neighbour table stays shared).
+    With B copies of one model's tables this is bit-identical to the
+    single-model kernel (the per-replica float ops are the same).
+    """
+    B, rows, lanes = spins.shape
+    assert base_J2_b.shape[0] == B and tau_J2_b.shape[0] == B
+    sd = base_nbr.shape[1]
+    lpv = rows // n
+    # Per-row tables as in `_row_tables`, tiled per slot for the coupling
+    # operands; the absolute-neighbour-row table is topology, hence shared.
+    row_nbr = (
+        jnp.arange(lpv, dtype=jnp.int32)[:, None, None] * n + base_nbr[None]
+    ).reshape(rows, sd)
+    row_j2_b = jnp.tile(base_J2_b, (1, lpv, 1))  # (B, rows, SD)
+    row_tau2_b = jnp.tile(tau_J2_b, (1, lpv, 1))  # (B, rows, 1)
+    return _fused_multisweep_call(
+        spins, h_space, h_tau, rng, row_nbr, row_j2_b, row_tau2_b, beta,
+        n, num_sweeps, exp_flavor, interpret, replica_tile, multi=True,
+    )
 
 
 # -----------------------------------------------------------------------------
@@ -496,5 +583,123 @@ def make_colored_multisweep_kernel(
             out_specs=(tile_spec, tile_spec, tile_spec, rng_spec),
             interpret=interpret,
         )(spins, rng, beta.reshape(-1, 1), *table_leaves)
+
+    return fn
+
+
+def _make_colored_multi_body(
+    tables_treedef,
+    n: int,
+    rows: int,
+    bt: int,
+    blocks: int,
+    num_sweeps: int,
+    exp_flavor: str,
+):
+    """Multi-tenant colored-sweep body: like `_make_colored_body`, but the
+    per-model coupling tables (h, base_J, tau_J) arrive as BATCHED input
+    refs with a leading tile dim and the vmap over the replica tile maps
+    over them too, each slot binding its own couplings onto the SHARED
+    structural color classes (`metropolis.bind_class_tables` — the same
+    binding the jnp backend vmaps, so the backends stay bit-identical).
+    """
+    exp_fn = fx.EXP_FNS[exp_flavor]
+
+    def body(spins_ref, rng_ref, beta_ref, h_ref, bJ_ref, tJ_ref, *refs):
+        *table_refs, o_spins_ref, o_hs_ref, o_ht_ref, o_rng_ref = refs
+        classes, base_nbr = jax.tree_util.tree_unflatten(
+            tables_treedef, [r[...] for r in table_refs]
+        )
+        h_b, bJ_b, tJ_b = h_ref[...], bJ_ref[...], tJ_ref[...]
+        o_rng_ref[...] = rng_ref[...]
+        beta_vec = beta_ref[...].reshape(bt)
+        # Gathered ONCE per launch — loop-invariant, must not ride the
+        # per-sweep loop (the jnp backend hoists identically; same values
+        # either way, so still bit-exact).
+        cls_tabs_b = mp.class_coupling_slices(classes, h_b, bJ_b, tJ_b, n)
+
+        def flip_one(sb, ub, bb, *cls_tabs):
+            bound = mp.bind_class_tables(classes, cls_tabs)
+            return mp.colored_flip_spins(sb, ub, bb, bound, exp_fn)
+
+        def sweep_step(_k, s):
+            s_rng, u = _draw_sweep_uniforms(o_rng_ref[...], blocks, rows)
+            o_rng_ref[...] = s_rng
+            u_t = u.reshape(rows, bt, LANES).transpose(1, 0, 2)
+            return jax.vmap(flip_one)(s, u_t, beta_vec, *cls_tabs_b)
+
+        s = lax.fori_loop(0, num_sweeps, sweep_step, spins_ref[...])
+        o_spins_ref[...] = s
+        hs, ht = jax.vmap(
+            lambda sb, hb, jb, tb: mp.lane_h_eff(sb, hb, base_nbr, jb, tb, n)
+        )(s, h_b, bJ_b, tJ_b)
+        o_hs_ref[...] = hs
+        o_ht_ref[...] = ht
+
+    return body
+
+
+def make_colored_multisweep_multi_kernel(
+    classes,  # tuple of reorder.ColorClass (host numpy; structure + defaults)
+    base_nbr,  # (n, SD) int32 — SHARED topology
+    n: int,
+    exp_flavor: str = "fast",
+    interpret: bool = True,
+    replica_tile: int | None = None,
+):
+    """Build the multi-tenant fused colored-sweep entry for one TOPOLOGY.
+
+    Returns ``fn(spins, rng, beta, h_b, base_J_b, tau_J_b, num_sweeps) ->
+    (spins, h_space, h_tau, rng)`` with the per-slot coupling tables as
+    runtime ``[B, ...]`` inputs — unlike `make_colored_multisweep_kernel`,
+    which closes over one model's couplings, this callable serves any
+    model mix sharing the structural classes' lattice.
+    """
+    tables = (
+        jax.tree_util.tree_map(jnp.asarray, tuple(classes)),
+        jnp.asarray(base_nbr, jnp.int32),
+    )
+    table_leaves, tables_treedef = jax.tree_util.tree_flatten(tables)
+
+    @functools.partial(jax.jit, static_argnums=(6,))
+    def fn(spins, rng, beta, h_b, base_J_b, tau_J_b, num_sweeps):
+        B, rows, lanes = spins.shape
+        assert lanes == LANES, spins.shape
+        assert rng.shape == (mt.N, B * LANES), (rng.shape, B)
+        assert h_b.shape[0] == B and base_J_b.shape[0] == B
+        bt = B if replica_tile is None else replica_tile
+        if B % bt != 0:
+            raise ValueError(f"replica_tile {bt} must divide batch {B}")
+        blocks = -(-rows // mt.N)  # ceil
+        body = _make_colored_multi_body(
+            tables_treedef, n, rows, bt, blocks, num_sweeps, exp_flavor
+        )
+        tile_spec = pl.BlockSpec((bt, rows, LANES), lambda g: (g, 0, 0))
+        rng_spec = pl.BlockSpec((mt.N, bt * LANES), lambda g: (0, g))
+        shared = lambda a: pl.BlockSpec(a.shape, lambda g: (0,) * a.ndim)
+        return pl.pallas_call(
+            body,
+            out_shape=(
+                jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
+                jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
+                jax.ShapeDtypeStruct((B, rows, LANES), jnp.float32),
+                jax.ShapeDtypeStruct((mt.N, B * LANES), jnp.uint32),
+            ),
+            grid=(B // bt,),
+            in_specs=[
+                tile_spec,
+                rng_spec,
+                pl.BlockSpec((bt, 1), lambda g: (g, 0)),
+                pl.BlockSpec((bt, n), lambda g: (g, 0)),
+                pl.BlockSpec((bt, n, base_J_b.shape[2]), lambda g: (g, 0, 0)),
+                pl.BlockSpec((bt, n), lambda g: (g, 0)),
+                *[shared(a) for a in table_leaves],
+            ],
+            out_specs=(tile_spec, tile_spec, tile_spec, rng_spec),
+            interpret=interpret,
+        )(
+            spins, rng, beta.reshape(-1, 1), h_b, base_J_b, tau_J_b,
+            *table_leaves,
+        )
 
     return fn

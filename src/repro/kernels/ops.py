@@ -121,6 +121,45 @@ def metropolis_multisweep(
     )
 
 
+def metropolis_multisweep_multi(
+    spins,
+    h_space,
+    h_tau,
+    rng,
+    base_nbr,  # (n, SD) shared topology
+    base_J2_b,  # (B, n, SD) per-slot doubled couplings
+    tau_J2_b,  # (B, n) per-slot doubled tau couplings
+    beta,
+    n: int,
+    num_sweeps: int,
+    exp_flavor: str = "fast",
+    interpret=None,
+    replica_tile: int | None = None,
+):
+    """Multi-tenant fused batched sweep: like `metropolis_multisweep`, but
+    each replica slot sweeps its OWN model's couplings (same lattice
+    topology), shipped as ``[B, ...]`` batched kernel inputs.  Returns
+    (spins, h_space, h_tau, rng).
+    """
+    interpret = _auto_interpret(interpret)
+    B = spins.shape[0]
+    return metropolis_kernel.metropolis_multisweep_multi_kernel(
+        spins,
+        h_space,
+        h_tau,
+        rng,
+        base_nbr,
+        base_J2_b,
+        jnp.reshape(tau_J2_b, (B, -1, 1)),
+        jnp.reshape(beta, (-1, 1)),
+        n,
+        num_sweeps,
+        exp_flavor,
+        interpret,
+        replica_tile,
+    )
+
+
 def make_colored_multisweep(
     classes,
     h,
@@ -147,6 +186,31 @@ def make_colored_multisweep(
         base_nbr,
         base_J,
         tau_J,
+        n,
+        exp_flavor,
+        interpret,
+        replica_tile,
+    )
+
+
+def make_colored_multisweep_multi(
+    classes,
+    base_nbr,
+    n: int,
+    exp_flavor: str = "fast",
+    interpret=None,
+    replica_tile: int | None = None,
+):
+    """Build the multi-tenant fused colored-sweep entry for one TOPOLOGY:
+    ``fn(spins, rng, beta, h_b, base_J_b, tau_J_b, num_sweeps)`` with the
+    per-slot (UNDOUBLED) coupling tables as runtime ``[B, ...]`` inputs —
+    one compiled callable serves any model mix sharing the lattice of
+    ``classes`` (`reorder.colored_classes` of any such model).
+    """
+    interpret = _auto_interpret(interpret)
+    return metropolis_kernel.make_colored_multisweep_multi_kernel(
+        classes,
+        base_nbr,
         n,
         exp_flavor,
         interpret,

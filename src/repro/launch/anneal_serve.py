@@ -12,6 +12,11 @@ between chunks.
 
 ``--smoke`` is the CI gate: 8 mixed-budget jobs (constants, a ramp, and
 a 3-replica PT job) on a tiny model, < 60 s on CPU.
+
+The serving default rung is the graph-colored ``cb`` chain (same
+equilibrium as a4, ~20x faster per sweep on the CPU jnp path — ROADMAP
+colored-serving-default); ``--rung a4`` is the escape hatch back to the
+paper's sequential order.
 """
 
 from __future__ import annotations
@@ -73,7 +78,9 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
-    ap.add_argument("--rung", default="a4")
+    ap.add_argument("--rung", default="cb",
+                    help="sweep rung; the colored 'cb' chain is the serving "
+                         "default, --rung a4 restores sequential order")
     ap.add_argument("--V", type=int, default=4)
     ap.add_argument("--n", type=int, default=8)
     ap.add_argument("--L", type=int, default=16)

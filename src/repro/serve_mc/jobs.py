@@ -21,6 +21,13 @@ Both job types reproduce their standalone counterparts bit for bit: an
 `AnnealJob` equals a solo ``SweepEngine`` run with the same seed and
 schedule, a `PTJob` equals `tempering.run_parallel_tempering` — no matter
 which slots they land in or what runs beside them (tests/test_serve_mc.py).
+
+On a MULTI-TENANT server (``SampleServer(..., multi_tenant=True)``) either
+job may additionally carry its OWN `LayeredModel` (same lattice topology
+as the server's base model): admission splices the model's coupling tables
+into the job's slots next to the carry, so jobs over different spin-glass
+instances ride the same fused launches — and still reproduce their solo
+runs bit for bit (DESIGN.md §Multi-tenancy).
 """
 
 from __future__ import annotations
@@ -51,11 +58,17 @@ class _ScheduledJob:
 
     ``segments`` is a list of positive sweep counts.  The scheduler only
     ever advances a job by ``k <= remaining_in_segment()`` sweeps.
+
+    ``model`` is the job's OWN `LayeredModel` (multi-tenant servers only):
+    admission splices its coupling tables into the job's slots alongside
+    the carry, so jobs over *different* models of one lattice share fused
+    launches.  ``model=None`` means the server's base model — the only
+    option on a single-model server.
     """
 
     num_slots = 1
 
-    def __init__(self, segments: Sequence[int]):
+    def __init__(self, segments: Sequence[int], model: ising.LayeredModel | None = None):
         segments = [int(s) for s in segments]
         if not segments or any(s <= 0 for s in segments):
             raise ValueError(f"segments must be positive sweep counts: {segments}")
@@ -65,6 +78,11 @@ class _ScheduledJob:
         self.sweeps_done = 0
         self.chunks = 0
         self.jid: int | None = None  # assigned by SampleServer.submit
+        self.model = model
+
+    def model_on(self, server) -> ising.LayeredModel:
+        """The model this job samples when served by ``server``."""
+        return self.model if self.model is not None else server.engine.model
 
     @property
     def done(self) -> bool:
@@ -113,15 +131,22 @@ class AnnealJob(_ScheduledJob):
         seed: int,
         schedule: Sequence[tuple[int, float | None]],
         spins: np.ndarray | None = None,
+        model: ising.LayeredModel | None = None,
     ):
-        super().__init__([s for s, _ in schedule])
+        super().__init__([s for s, _ in schedule], model=model)
         self.seed = int(seed)
         self._betas = [b if b is None else float(b) for _, b in schedule]
         self._init_spins = None if spins is None else np.asarray(spins, np.float32)
 
     @classmethod
-    def constant(cls, seed: int, sweeps: int, beta: float | None = None):
-        return cls(seed, [(sweeps, beta)])
+    def constant(
+        cls,
+        seed: int,
+        sweeps: int,
+        beta: float | None = None,
+        model: ising.LayeredModel | None = None,
+    ):
+        return cls(seed, [(sweeps, beta)], model=model)
 
     @classmethod
     def ramp(
@@ -131,14 +156,17 @@ class AnnealJob(_ScheduledJob):
         beta_end: float,
         steps: int,
         sweeps_per_step: int,
+        model: ising.LayeredModel | None = None,
     ):
         """Linear beta ramp: ``steps`` segments of ``sweeps_per_step``."""
         betas = np.linspace(beta_start, beta_end, steps)
-        return cls(seed, [(sweeps_per_step, float(b)) for b in betas])
+        return cls(
+            seed, [(sweeps_per_step, float(b)) for b in betas], model=model
+        )
 
     def _beta(self, server, seg: int) -> float:
         b = self._betas[seg]
-        return float(server.engine.model.beta) if b is None else b
+        return float(self.model_on(server).beta) if b is None else b
 
     def current_beta(self, server) -> float:
         return self._beta(server, self._seg)
@@ -151,6 +179,7 @@ class AnnealJob(_ScheduledJob):
                 seed=self.seed,
                 spins=self._init_spins,
                 beta=self._beta(server, 0),
+                model=self.model,
             )
         ]
 
@@ -162,7 +191,7 @@ class AnnealJob(_ScheduledJob):
         )
 
     def finalize(self, server, slots) -> JobResult:
-        eng, m = server.engine, server.engine.model
+        eng, m = server.engine, self.model_on(server)
         sub = eng.extract_slot(server.carry, slots[0])
         spins = eng.spins_flat(sub)[0]
         return JobResult(
@@ -196,21 +225,23 @@ class PTJob(_ScheduledJob):
         betas: np.ndarray,
         num_rounds: int,
         sweeps_per_round: int = 1,
+        model: ising.LayeredModel | None = None,
     ):
         if num_rounds < 1:
             raise ValueError(f"num_rounds must be >= 1, got {num_rounds}")
-        super().__init__([int(sweeps_per_round)] * int(num_rounds))
+        super().__init__([int(sweeps_per_round)] * int(num_rounds), model=model)
         self.seed = int(seed)
         self.betas = np.asarray(betas, np.float32)
         self.num_slots = len(self.betas)
         self.swap_rng = mt19937.mt_init(self.seed + 17)  # as tempering.init_pt
         self.swap_accept = jnp.int32(0)
         self.swap_propose = jnp.int32(0)
+        self._energy_tables = None  # built on first swap for a private model
 
     # -- scheduler interface --------------------------------------------------
 
     def init_carries(self, server) -> list[sweep_engine.SweepCarry]:
-        eng, m = server.engine, server.engine.model
+        eng, m = server.engine, self.model_on(server)
         lanes = eng._slot_lanes()
         seeds = sweep_engine.lane_seeds(self.num_slots, lanes, self.seed)
         return [
@@ -219,6 +250,7 @@ class PTJob(_ScheduledJob):
                 spins=ising.init_spins(m, seed=self.seed * 1000 + b),
                 beta=float(self.betas[b]),
                 rng_seeds=seeds[b * lanes : (b + 1) * lanes],
+                model=self.model,
             )
             for b in range(self.num_slots)
         ]
@@ -238,6 +270,16 @@ class PTJob(_ScheduledJob):
             swap_propose=self.swap_propose,
         )
 
+    def _swap_energy_tables(self, eng):
+        """Energy tables of the job's model: the engine's when the job has
+        none (bit-path identical to the single-model server), else built
+        once per job from the private model."""
+        if self.model is None:
+            return tempering.energy_tables(eng)
+        if self._energy_tables is None:
+            self._energy_tables = tempering.model_energy_tables(self.model)
+        return self._energy_tables
+
     def on_segment(self, server, carry, slots):
         eng = server.engine
         state = self._gather_state(eng, carry, slots)
@@ -245,7 +287,7 @@ class PTJob(_ScheduledJob):
         # standalone driver's ``r % 2``
         state = tempering.swap_phase(
             state,
-            *tempering.energy_tables(eng),
+            *self._swap_energy_tables(eng),
             jnp.asarray(parity, jnp.int32),
             eng.model.n,
             eng.exp_flavor,
@@ -256,7 +298,7 @@ class PTJob(_ScheduledJob):
         return eng.set_slot_betas(carry, slots, state.betas)
 
     def finalize(self, server, slots) -> JobResult:
-        eng, m = server.engine, server.engine.model
+        eng, m = server.engine, self.model_on(server)
         spins = np.stack(
             [eng.spins_flat(eng.extract_slot(server.carry, b))[0] for b in slots]
         )

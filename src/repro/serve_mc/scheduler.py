@@ -34,6 +34,16 @@ regardless of batch size, (b) chunk boundaries never change the stream
 position (it is a pure function of sweeps completed), and (c) chunks stop
 at segment boundaries.  Idle slots keep sweeping whatever they last held
 — wasted work, not wrong work; utilization is reported in `stats()`.
+
+``multi_tenant=True`` builds the engine with `SweepEngine.build_multi`:
+each slot additionally owns a row of batched per-slot coupling tables, so
+jobs over DIFFERENT models of one lattice (same topology, different
+couplings/fields — e.g. disorder realizations) pack into the same fused
+launches; admission splices the job model's tables next to its carry.
+The determinism contract extends unchanged: slot tables are as private
+as the carry rows, so solo == packed still holds bit for bit, and a
+model-less job on a multi-tenant server is bit-identical to the same job
+on a single-model server (DESIGN.md §Multi-tenancy).
 """
 
 from __future__ import annotations
@@ -143,6 +153,7 @@ class SampleServer:
         replica_tile: int | None = None,
         idle_seed: int = 0,
         chunker: AdaptiveChunker | None = None,
+        multi_tenant: bool = False,
     ):
         if chunk_sweeps == "adaptive":
             self._chunker = chunker or AdaptiveChunker()
@@ -158,16 +169,30 @@ class SampleServer:
             from repro.kernels import ops  # deferred: kernels are optional
 
             V = ops.LANES
-        self.engine = SweepEngine.build(
-            model,
-            rung=rung,
-            backend=backend,
-            batch=slots,
-            V=V,
-            exp_flavor=exp_flavor,
-            interpret=interpret,
-            replica_tile=replica_tile,
-        )
+        self.multi_tenant = bool(multi_tenant)
+        if self.multi_tenant:
+            # Every slot starts on the base model; jobs carrying their own
+            # model get its coupling tables spliced in at admission.
+            self.engine = SweepEngine.build_multi(
+                [model] * slots,
+                rung=rung,
+                backend=backend,
+                V=V,
+                exp_flavor=exp_flavor,
+                interpret=interpret,
+                replica_tile=replica_tile,
+            )
+        else:
+            self.engine = SweepEngine.build(
+                model,
+                rung=rung,
+                backend=backend,
+                batch=slots,
+                V=V,
+                exp_flavor=exp_flavor,
+                interpret=interpret,
+                replica_tile=replica_tile,
+            )
         # Idle slots hold (and keep sweeping) this placeholder state until
         # a job is spliced over it.
         self.carry = self.engine.init_carry(seed=idle_seed)
@@ -205,6 +230,13 @@ class SampleServer:
             )
         if job.jid is not None:
             raise ValueError(f"job already submitted (jid={job.jid})")
+        if getattr(job, "model", None) is not None:
+            if not self.multi_tenant:
+                raise ValueError(
+                    "job carries its own model; this server is single-model "
+                    "— construct it with multi_tenant=True"
+                )
+            self.engine.check_model(job.model)  # reject topology mismatch now
         job.jid = self._next_jid
         self._next_jid += 1
         self._queue.append(job)
@@ -222,6 +254,12 @@ class SampleServer:
             taken = tuple(self._free[: job.num_slots])
             del self._free[: job.num_slots]
             for b, slot_carry in zip(taken, job.init_carries(self)):
+                if self.multi_tenant:
+                    # The slot sweeps the job's model from now on: splice
+                    # its coupling tables next to the carry (jobs without a
+                    # model reset the slot to the base model, so a retired
+                    # tenant's tables never leak into the next job).
+                    self.engine.set_slot_model(b, job.model_on(self))
                 self.carry = self.engine.splice_slot(self.carry, b, slot_carry)
             self._active[job.jid] = (job, taken)
 

@@ -249,3 +249,56 @@ def test_cb_equilibrium_matches_a4():
     assert abs(m4 - mc) < m_tol, (m4, mc, m_tol)
     # The tolerance itself must be meaningfully tight vs the energy scale.
     assert e_tol < 0.08 * abs(e4)
+
+
+def _equilibrium_stats_packed(models, *, burn, chunks, chunk_sweeps, seed):
+    """Per-MODEL equilibrium stats from one multi-tenant packed engine:
+    every slot sweeps its own model; replica means are grouped by model."""
+    eng = engine.SweepEngine.build_multi(models, rung="cb", backend="jnp", V=4)
+    carry = eng.run(eng.init_carry(seed=seed), burn)
+    B = len(models)
+    e_samples = np.empty((chunks, B))
+    m_samples = np.empty((chunks, B))
+    for c in range(chunks):
+        carry = eng.run(carry, chunk_sweeps)
+        spins = eng.spins_flat(carry)
+        for b, mm in enumerate(models):
+            e_samples[c, b] = observables.energies(mm, spins[b])
+            m_samples[c, b] = abs(observables.magnetization(spins[b]))
+    out = {}
+    for mm in set(map(id, models)):
+        idx = [b for b, m2 in enumerate(models) if id(m2) == mm]
+        e_rep = e_samples[:, idx].mean(axis=0)
+        m_rep = m_samples[:, idx].mean(axis=0)
+        out[mm] = (
+            e_rep.mean(), e_rep.std(ddof=1) / np.sqrt(len(idx)),
+            m_rep.mean(), m_rep.std(ddof=1) / np.sqrt(len(idx)),
+        )
+    return out
+
+
+def test_cb_equilibrium_multi_model_packed():
+    """Two DISTINCT models annealed side by side in one multi-tenant packed
+    engine: each model's slots must reproduce that model's own single-model
+    equilibrium mean E and |m| within combined standard errors — per-slot
+    coupling tables neither leak between neighbours nor distort either
+    chain's stationary distribution."""
+    mA = ising.random_layered_model(n=6, L=16, seed=9, beta=0.45)
+    mB = ising.reseed_couplings(mA, seed=21)  # same lattice, new disorder
+    kw = dict(burn=250, chunks=20, chunk_sweeps=20)
+    packed = _equilibrium_stats_packed([mA] * 10 + [mB] * 10, seed=3, **kw)
+    for mm, label in ((mA, "A"), (mB, "B")):
+        e_ref, se_ref, m_ref, sm_ref = _equilibrium_stats(
+            mm, "cb", batch=10, seed=4, **kw
+        )
+        e_pk, se_pk, m_pk, sm_pk = packed[id(mm)]
+        e_tol = 4.0 * np.hypot(se_ref, se_pk)
+        m_tol = 4.0 * np.hypot(sm_ref, sm_pk)
+        assert abs(e_ref - e_pk) < e_tol, (label, e_ref, e_pk, e_tol)
+        assert abs(m_ref - m_pk) < m_tol, (label, m_ref, m_pk, m_tol)
+        assert e_tol < 0.1 * abs(e_ref), (label, e_tol, e_ref)
+    # The two models are genuinely different instances: their equilibrium
+    # energies must be distinguishable, or the test would pass vacuously.
+    eA, seA = packed[id(mA)][0], packed[id(mA)][1]
+    eB, seB = packed[id(mB)][0], packed[id(mB)][1]
+    assert abs(eA - eB) > 4.0 * np.hypot(seA, seB), (eA, eB)

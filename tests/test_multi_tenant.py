@@ -1,0 +1,229 @@
+"""Multi-tenant SweepEngine: per-slot coupling tables as batched inputs.
+
+The load-bearing guarantee (DESIGN.md §Multi-tenancy): the multi-model
+path is the single-model path with the coupling tables promoted from
+closure-captured constants to vmapped per-slot arguments — so with B
+copies of one model's tables every float is bit-identical to `build`,
+and with different models each slot reproduces, bit for bit, the solo
+run of its own model.  Verified on both backends for both multi rungs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import engine, ising, reorder
+
+LANES = 128
+
+BASE = ising.random_layered_model(n=5, L=8, seed=1, beta=1.0)
+VARIANT = ising.reseed_couplings(BASE, seed=7, beta=0.8)
+
+
+def _carry_equal(a, b, msg=""):
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{msg} field={f}",
+        )
+
+
+def _engines(m, rung, backend, batch, V):
+    kw = dict(interpret=True) if backend == "pallas" else {}
+    single = engine.SweepEngine.build(
+        m, rung=rung, backend=backend, batch=batch, V=V, **kw
+    )
+    multi = engine.SweepEngine.build_multi(
+        [m] * batch, rung=rung, backend=backend, V=V, **kw
+    )
+    return single, multi
+
+
+# -----------------------------------------------------------------------------
+# Homogeneous: B copies of one model == the single-model engine, bit for bit.
+# -----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rung", ["a4", "cb"])
+def test_multi_equals_single_jnp(rung):
+    single, multi = _engines(BASE, rung, "jnp", batch=3, V=4)
+    cs, cm = single.init_carry(seed=3), multi.init_carry(seed=3)
+    _carry_equal(cs, cm, "init")
+    cs, cm = single.run(cs, 4), multi.run(cm, 4)
+    _carry_equal(cs, cm, f"{rung} after 4 sweeps")
+    # Second run call continues the same stream on both paths.
+    cs, cm = single.run(cs, 3), multi.run(cm, 3)
+    _carry_equal(cs, cm, f"{rung} after 4+3 sweeps")
+
+
+@pytest.mark.parametrize("rung", ["a4", "cb"])
+def test_multi_equals_single_pallas(rung):
+    m = ising.random_layered_model(n=4, L=2 * LANES, seed=4, beta=1.0)
+    single, multi = _engines(m, rung, "pallas", batch=2, V=LANES)
+    cs, cm = single.init_carry(seed=3), multi.init_carry(seed=3)
+    cs, cm = single.run(cs, 3), multi.run(cm, 3)
+    _carry_equal(cs, cm, f"{rung} pallas after 3 sweeps")
+
+
+# -----------------------------------------------------------------------------
+# Heterogeneous: each slot reproduces its own model's solo run; the two
+# backends stay bit-exact with different models resident.
+# -----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rung", ["a4", "cb"])
+def test_hetero_slot_equals_solo_run(rung):
+    multi = engine.SweepEngine.build_multi(
+        [BASE, VARIANT], rung=rung, backend="jnp", V=4
+    )
+    carry = multi.init_carry(seed=3)
+    slot = multi.init_slot_carry(seed=11, model=VARIANT)
+    multi.set_slot_model(1, VARIANT)
+    carry = multi.splice_slot(carry, 1, slot)
+    carry = multi.run(carry, 4)
+    got = multi.extract_slot(carry, 1)
+
+    solo = engine.SweepEngine.build(VARIANT, rung=rung, backend="jnp", batch=1, V=4)
+    want = solo.run(solo.init_slot_carry(seed=11), 4)
+    _carry_equal(got, want, f"{rung} hetero slot vs solo")
+    assert multi.model_of(1) is VARIANT and multi.model_of(0) is BASE
+
+
+@pytest.mark.parametrize("rung", ["a4", "cb"])
+def test_hetero_pallas_equals_jnp(rung):
+    m = ising.random_layered_model(n=4, L=2 * LANES, seed=4, beta=1.0)
+    mv = ising.reseed_couplings(m, seed=9)
+    engines = [
+        engine.SweepEngine.build_multi(
+            [m, mv], rung=rung, backend=backend, V=LANES,
+            **(dict(interpret=True) if backend == "pallas" else {}),
+        )
+        for backend in ("jnp", "pallas")
+    ]
+    carries = [e.init_carry(seed=5) for e in engines]
+    carries = [e.run(c, 3) for e, c in zip(engines, carries)]
+    _carry_equal(carries[0], carries[1], f"{rung} hetero jnp vs pallas")
+
+
+def test_hetero_replica_tiling_bit_equal():
+    m = ising.random_layered_model(n=4, L=2 * LANES, seed=8, beta=1.0)
+    mv = ising.reseed_couplings(m, seed=3)
+    models = [m, mv, mv, m]
+    whole = engine.SweepEngine.build_multi(
+        models, rung="cb", backend="pallas", V=LANES, interpret=True
+    )
+    cw = whole.run(whole.init_carry(seed=6), 2)
+    for tile in (1, 2):
+        tiled = engine.SweepEngine.build_multi(
+            models, rung="cb", backend="pallas", V=LANES, interpret=True,
+            replica_tile=tile,
+        )
+        ct = tiled.run(tiled.init_carry(seed=6), 2)
+        _carry_equal(cw, ct, f"replica_tile={tile}")
+
+
+# -----------------------------------------------------------------------------
+# Slot-table splice/extract mirror the slot-carry APIs.
+# -----------------------------------------------------------------------------
+
+
+def test_slot_tables_splice_extract_roundtrip():
+    multi = engine.SweepEngine.build_multi(
+        [BASE] * 3, rung="a4", backend="jnp", V=4
+    )
+    want = multi.slot_tables_for(VARIANT)
+    multi.splice_slot_tables(1, want)
+    got = multi.extract_slot_tables(1)
+    assert sorted(got) == sorted(want)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(want[k]))
+    # Neighbouring slots still hold the base model's tables.
+    base_tabs = multi.slot_tables_for(BASE)
+    for b in (0, 2):
+        other = multi.extract_slot_tables(b)
+        for k in base_tabs:
+            np.testing.assert_array_equal(
+                np.asarray(other[k]), np.asarray(base_tabs[k])
+            )
+
+
+def test_raw_table_splice_invalidates_slot_model():
+    """A raw `splice_slot_tables` changes what the slot sweeps without a
+    model object, so `model_of` must report None and a later
+    `set_slot_model` must NOT no-op on a stale identity match — the slot
+    would silently keep the spliced tables while reporting the old model."""
+    multi = engine.SweepEngine.build_multi(
+        [BASE] * 2, rung="a4", backend="jnp", V=4
+    )
+    multi.splice_slot_tables(1, multi.slot_tables_for(VARIANT))
+    assert multi.model_of(1) is None
+    multi.set_slot_model(1, BASE)  # must re-splice, not no-op
+    assert multi.model_of(1) is BASE
+    base_tabs = multi.slot_tables_for(BASE)
+    got = multi.extract_slot_tables(1)
+    for k in base_tabs:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(base_tabs[k]))
+
+
+def test_set_slot_model_changes_physics():
+    """Splicing a different model's tables must change the slot's
+    trajectory (same seed, same uniforms, different couplings) — a silent
+    no-op here would make every multi-tenant result wrong-but-plausible."""
+    multi = engine.SweepEngine.build_multi(
+        [BASE] * 2, rung="a4", backend="jnp", V=4
+    )
+    c0 = multi.init_carry(seed=3)
+    plain = multi.run(c0, 4)
+    multi.set_slot_model(1, VARIANT)
+    mixed = multi.run(c0, 4)
+    np.testing.assert_array_equal(  # slot 0 untouched
+        np.asarray(plain.spins[0]), np.asarray(mixed.spins[0])
+    )
+    assert not np.array_equal(
+        np.asarray(plain.spins[1]), np.asarray(mixed.spins[1])
+    )
+
+
+# -----------------------------------------------------------------------------
+# Validation and the shared-coloring contract.
+# -----------------------------------------------------------------------------
+
+
+def test_build_multi_validation():
+    other_topology = ising.random_layered_model(n=5, L=8, seed=99, beta=1.0)
+    with pytest.raises(ValueError, match="topology"):
+        engine.SweepEngine.build_multi([BASE, other_topology], rung="a4")
+    wrong_shape = ising.random_layered_model(n=4, L=8, seed=1, beta=1.0)
+    with pytest.raises(ValueError, match="lane shape"):
+        engine.SweepEngine.build_multi([BASE, wrong_shape], rung="a4")
+    with pytest.raises(ValueError, match="rungs"):
+        engine.SweepEngine.build_multi([BASE], rung="a2")
+    with pytest.raises(ValueError, match="at least one"):
+        engine.SweepEngine.build_multi([], rung="a4")
+    multi = engine.SweepEngine.build_multi([BASE] * 2, rung="a4", backend="jnp", V=4)
+    with pytest.raises(ValueError, match="topology"):
+        multi.set_slot_model(0, other_topology)
+    with pytest.raises(ValueError, match="out of range"):
+        multi.splice_slot_tables(5, multi.slot_tables_for(VARIANT))
+    single = engine.SweepEngine.build(BASE, rung="a4", backend="jnp", batch=1, V=4)
+    with pytest.raises(ValueError, match="multi-tenant"):
+        single.splice_slot_tables(0, {})
+    with pytest.raises(ValueError, match="multi-tenant"):
+        single.init_slot_carry(seed=0, model=VARIANT)
+
+
+def test_colored_partition_shared_across_models():
+    """Models admissible in one multi-tenant engine share the cached row
+    coloring: `reorder.colored_partition` returns the SAME object for a
+    reseeded variant, and the resulting class row-partitions coincide."""
+    lpv = BASE.L // 4
+    p1 = reorder.colored_partition(BASE.space_nbr, BASE.n, lpv)
+    p2 = reorder.colored_partition(VARIANT.space_nbr, VARIANT.n, lpv)
+    assert p1 is p2
+    c_base = reorder.colored_classes(BASE, 4)
+    c_var = reorder.colored_classes(VARIANT, 4)
+    assert len(c_base) == len(c_var)
+    for a, b in zip(c_base, c_var):
+        np.testing.assert_array_equal(a.rows, b.rows)
+        np.testing.assert_array_equal(a.space_tgt, b.space_tgt)
+        np.testing.assert_array_equal(a.down_src, b.down_src)
+        np.testing.assert_array_equal(a.up_src, b.up_src)

@@ -1,0 +1,104 @@
+"""Property-based tests for the row coloring behind the "cb" rung.
+
+Randomized ``(L, n, V)`` lane shapes — not just the paper shape — pin the
+two invariants everything colored rests on: `reorder.color_rows` is a
+PROPER coloring of the row conflict graph, and `reorder.colored_classes`
+PARTITIONS the rows into conflict-free classes whose gather tables agree
+with the lane layout.  A violation of either silently breaks detailed
+balance (two interacting rows flipped against stale fields), which no
+bit-exactness test would catch — hence property coverage.
+
+``hypothesis`` is optional: on environments without it, conftest.py
+installs a stub whose ``@given`` marks these tests skipped (the dedicated
+CI job installs the real package so they actually run there).
+"""
+
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core import ising, reorder
+
+
+def _conflicts(m, lpv):
+    """The row conflict sets the coloring must respect: in-layer space
+    neighbours, plus tau links one layer block up/down (mod lpv — the
+    lane-rotated wrap makes block lpv-1 adjacent to block 0)."""
+    rows = lpv * m.n
+    out = []
+    for q in range(rows):
+        p, i = divmod(q, m.n)
+        conf = {p * m.n + int(j) for j in m.space_nbr[i] if int(j) != i}
+        conf |= {((p - 1) % lpv) * m.n + i, ((p + 1) % lpv) * m.n + i}
+        out.append(conf)
+    return out
+
+
+shapes = dict(
+    n=st.integers(min_value=2, max_value=10),
+    lpv=st.integers(min_value=2, max_value=5),
+    V=st.sampled_from([2, 4]),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+
+
+@given(**shapes)
+def test_color_rows_is_a_proper_coloring(n, lpv, V, seed):
+    m = ising.random_layered_model(n=n, L=lpv * V, seed=seed, beta=1.0)
+    colors, C = reorder.color_rows(m.space_nbr, n, lpv)
+    rows = lpv * n
+    assert colors.shape == (rows,)
+    assert colors.min() >= 0 and colors.max() < C
+    # Small palette: the product construction never exceeds
+    # max(chi_cycle, maxdeg+1) <= space_degree + 2.
+    assert C <= max(3, m.space_degree + 1)
+    for q, conf in enumerate(_conflicts(m, lpv)):
+        for r in conf:
+            assert colors[r] != colors[q], (q, r, colors[q])
+
+
+@given(**shapes)
+def test_colored_classes_partition_and_tables(n, lpv, V, seed):
+    m = ising.random_layered_model(n=n, L=lpv * V, seed=seed, beta=1.0)
+    classes = reorder.colored_classes(m, V)
+    rows = lpv * n
+    # Classes PARTITION the rows: every row exactly once.
+    all_rows = np.concatenate([c.rows for c in classes])
+    assert sorted(all_rows.tolist()) == list(range(rows))
+    conflicts = _conflicts(m, lpv)
+    for cls in classes:
+        members = set(cls.rows.tolist())
+        for q in cls.rows:
+            assert not (conflicts[q] & members), (q, conflicts[q] & members)
+        # Gather tables agree with the lane layout.
+        p, i = cls.rows // n, cls.rows % n
+        np.testing.assert_array_equal(cls.h, m.h[i])
+        np.testing.assert_array_equal(cls.space_J, m.space_J[i])
+        np.testing.assert_array_equal(cls.tau_J, m.tau_J[i])
+        np.testing.assert_array_equal(cls.space_tgt, p[:, None] * n + m.space_nbr[i])
+        np.testing.assert_array_equal(
+            cls.down_src, np.where(p == 0, (lpv - 1) * n + i, cls.rows - n)
+        )
+        np.testing.assert_array_equal(
+            cls.up_src, np.where(p == lpv - 1, i, cls.rows + n)
+        )
+        np.testing.assert_array_equal(cls.down_roll, p == 0)
+        np.testing.assert_array_equal(cls.up_roll, p == lpv - 1)
+
+
+@given(
+    n=st.integers(min_value=2, max_value=8),
+    lpv=st.integers(min_value=2, max_value=4),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_colored_partition_reused_across_disorder(n, lpv, seed):
+    """One coloring per (lane shape, topology): a reseeded-couplings
+    variant — the multi-tenant tenant case — hits the partition cache and
+    gets the identical row partition."""
+    V = 2
+    m = ising.random_layered_model(n=n, L=lpv * V, seed=seed, beta=1.0)
+    mv = ising.reseed_couplings(m, seed=seed + 1)
+    assert reorder.colored_partition(m.space_nbr, n, lpv) is \
+        reorder.colored_partition(mv.space_nbr, n, lpv)
+    for a, b in zip(reorder.colored_classes(m, V), reorder.colored_classes(mv, V)):
+        np.testing.assert_array_equal(a.rows, b.rows)

@@ -154,6 +154,122 @@ def test_pt_job_waits_for_enough_free_slots():
 
 
 # -----------------------------------------------------------------------------
+# Multi-tenant stress: a seeded random admit/retire/chunk schedule over
+# mixed Anneal/PT jobs with DIFFERENT models must reproduce every job's
+# solo run bit for bit (generalizes the fixed-schedule tests above).
+# -----------------------------------------------------------------------------
+
+
+VARIANTS = [
+    None,  # the server's base model
+    ising.reseed_couplings(MODEL, seed=31, beta=0.9),
+    ising.reseed_couplings(MODEL, seed=32, beta=1.1),
+]
+
+
+def _random_job_specs(rng, num_jobs):
+    specs = []
+    for i in range(num_jobs):
+        mi = int(rng.integers(0, len(VARIANTS)))
+        if i % 4 == 2:
+            specs.append(
+                ("pt", 300 + i, mi, int(rng.integers(1, 4)), 2)
+            )  # (kind, seed, model idx, rounds, sweeps/round)
+        else:
+            specs.append(
+                ("anneal", 300 + i, mi, int(rng.integers(2, 11)),
+                 float(rng.uniform(0.5, 1.5)))
+            )  # (kind, seed, model idx, budget, beta)
+    return specs
+
+
+def _make_job(spec):
+    kind, seed, mi, a, b = spec
+    model = VARIANTS[mi]
+    if kind == "pt":
+        betas = np.linspace(0.5, 1.3, 2).astype(np.float32)
+        return PTJob(seed=seed, betas=betas, num_rounds=a, sweeps_per_round=b,
+                     model=model)
+    return AnnealJob.constant(seed=seed, sweeps=a, beta=b, model=model)
+
+
+@pytest.mark.parametrize("rung", ["a4", "cb"])
+def test_random_slot_reuse_multi_model_stress(rung):
+    rng = np.random.default_rng(2024)
+    specs = _random_job_specs(rng, num_jobs=9)
+    jobs = [_make_job(s) for s in specs]
+    packed = SampleServer(
+        MODEL, slots=4, chunk_sweeps=3, rung=rung, backend="jnp", V=4,
+        multi_tenant=True,
+    )
+    # Random admission times: jobs arrive while earlier ones are mid-
+    # flight, so slots are retired and re-spliced (carry AND tables) with
+    # different tenants in arbitrary order.
+    results, pending = [], list(jobs)
+    while pending or packed.num_active or packed.num_queued:
+        if pending and rng.random() < 0.6:
+            packed.submit(pending.pop(0))
+        if packed.num_active or packed.num_queued:
+            results.extend(packed.step())
+    by_jid = {r.jid: r for r in results}
+    assert sorted(by_jid) == sorted(j.jid for j in jobs)
+
+    for spec, job in zip(specs, jobs):
+        kind, seed, mi, a, b = spec
+        model = VARIANTS[mi] or MODEL
+        got = by_jid[job.jid]
+        if kind == "pt":
+            state, energies = tempering.run_parallel_tempering(
+                model, np.linspace(0.5, 1.3, 2).astype(np.float32), a,
+                V=4, seed=seed, sweeps_per_round=b, rung=rung, backend="jnp",
+            )
+            want = np.stack(
+                [reorder.from_lane(np.asarray(s), model.n, model.L, 4)
+                 for s in state.spins]
+            )
+            np.testing.assert_array_equal(got.spins, want)
+            np.testing.assert_array_equal(
+                got.extras["betas"], np.asarray(state.betas)
+            )
+            assert got.extras["swap_propose"] == int(state.swap_propose)
+        else:
+            solo = SampleServer(
+                MODEL, slots=1, chunk_sweeps=5, rung=rung, backend="jnp",
+                V=4, multi_tenant=True,
+            )  # different chunking on purpose
+            solo.submit(_make_job(spec))
+            (r_solo,) = solo.drain()
+            np.testing.assert_array_equal(r_solo.spins, got.spins)
+            assert r_solo.energy == got.energy
+
+
+def test_multi_tenant_homogeneous_bit_equals_single_model_server():
+    """A model-less job mix through a multi_tenant server equals the same
+    mix through today's single-model server, bit for bit — the multi path
+    is a strict superset, not a fork."""
+    def run(multi):
+        srv = _server(slots=3, chunk_sweeps=2, multi_tenant=multi)
+        for s, b in MIXED:
+            srv.submit(AnnealJob.constant(seed=s, sweeps=b, beta=1.0))
+        return srv.drain()
+
+    for r1, rm in zip(run(False), run(True)):
+        np.testing.assert_array_equal(r1.spins, rm.spins)
+        assert r1.energy == rm.energy
+
+
+def test_multi_tenant_submit_validation():
+    variant = ising.reseed_couplings(MODEL, seed=5)
+    srv = _server(slots=2, chunk_sweeps=2)  # single-model server
+    with pytest.raises(ValueError, match="multi_tenant"):
+        srv.submit(AnnealJob.constant(seed=0, sweeps=1, model=variant))
+    srv_m = _server(slots=2, chunk_sweeps=2, multi_tenant=True)
+    other = ising.random_layered_model(n=5, L=8, seed=77, beta=1.0)
+    with pytest.raises(ValueError, match="topology"):
+        srv_m.submit(AnnealJob.constant(seed=0, sweeps=1, model=other))
+
+
+# -----------------------------------------------------------------------------
 # Backend parity: the scheduler is backend-agnostic.
 # -----------------------------------------------------------------------------
 
