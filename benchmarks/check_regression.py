@@ -1,0 +1,230 @@
+"""CI bench-regression gate: fresh BENCH_*.json vs committed baselines.
+
+`benchmarks.run kernels serve` writes machine-readable perf records to
+``BENCH_kernel.json`` / ``BENCH_serve.json`` (gitignored).  Until now CI
+only ARCHIVED them — a perf regression shipped silently inside a green
+build's artifact.  This gate turns the trajectory red instead: it
+compares the fresh records against the committed snapshots under
+``benchmarks/baselines/`` and fails when a gated metric drops below
+``min_ratio`` of its baseline value.
+
+Only RATIO-type metrics are gated (packed-vs-sequential speedups,
+colored-vs-a4 speedups, backfill-vs-fifo scheduling wins, utilization,
+sweep-clock waits) — they measure one code path against another on the
+SAME machine, so they transfer between this box and the CI runner in a
+way absolute sweeps/sec never could.  The scheduling sweep-clock metrics
+are fully deterministic (pure admission arithmetic, no wall clock), so
+their thresholds are tight: a scheduler regression flips them exactly,
+on any machine.
+
+Usage:
+    python -m benchmarks.check_regression                   # the CI gate
+    python -m benchmarks.check_regression --selftest        # trip-wire check
+    python -m benchmarks.check_regression --write-baselines # refresh snapshots
+
+``--selftest`` injects a synthetic threshold breach into the fresh
+records (in memory only) and exits 0 iff the gate actually trips — CI
+runs it right after the clean gate, so a broken comparator can never
+rot into a silent pass.
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+import shutil
+import sys
+
+from benchmarks.common import REPO_ROOT
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "baselines")
+
+#: Gated metrics.  ``direction="higher"`` (default): fail when
+#: fresh/baseline < min_ratio.  ``direction="lower"`` (latencies): fail
+#: when fresh/baseline > 1/min_ratio.  The wall-clock ratio gates sit at
+#: 0.5: they compare one code path against another within a single run,
+#: but the baseline was recorded on a different box than the CI runner
+#: and CPU contention squeezes the packed-vs-sequential gap, so the
+#: allowance covers hardware skew and load (a real regression — packing
+#: or coloring broken — pushes these ratios toward 1x/0x and still
+#: trips).  Refresh baselines from a CI bench-json artifact
+#: (``--write-baselines``) to tighten them.  The deterministic
+#: scheduling gates sit at 0.95 because they are exact on any machine.
+THRESHOLDS = (
+    # Packed continuous batching must keep beating resident-sequential.
+    dict(bench="serve", record="serve_packed_B8", metric="speedup_vs_B1",
+         min_ratio=0.5),
+    dict(bench="serve", record="serve_packed_B16", metric="speedup_vs_B1",
+         min_ratio=0.5),
+    dict(bench="serve", record="serve_cb_packed_B8", metric="speedup_vs_B1",
+         min_ratio=0.5),
+    dict(bench="serve", record="serve_hetero_packed_B8", metric="speedup_vs_B1",
+         min_ratio=0.5),
+    # Scheduling: backfill/fair must keep beating FIFO.  Wall ratio is
+    # machine-sensitive (0.5); the sweep-clock metrics are exact (0.95).
+    dict(bench="serve", record="sched_backfill", metric="speedup_vs_fifo",
+         min_ratio=0.5),
+    dict(bench="serve", record="sched_fair", metric="speedup_vs_fifo",
+         min_ratio=0.5),
+    dict(bench="serve", record="sched_backfill", metric="utilization",
+         min_ratio=0.95),
+    dict(bench="serve", record="sched_backfill", metric="p95_wait_sweeps",
+         min_ratio=0.95, direction="lower"),
+    dict(bench="serve", record="sched_fair", metric="p95_wait_sweeps",
+         min_ratio=0.95, direction="lower"),
+    # Baseline is 0 (the urgent job preempts its way in instantly); the
+    # absolute slack of one chunk (8 sweeps) is the only tolerated drift.
+    dict(bench="serve", record="sched_backfill", metric="urgent_wait_sweeps",
+         min_ratio=0.95, direction="lower", abs_slack=8),
+    # Colored sweeps must keep their lead over the sequential rung.
+    dict(bench="kernel", record="kernel_cb_jnp_paper_B8", metric="speedup_vs_a4",
+         min_ratio=0.5),
+    dict(bench="kernel", record="kernel_cb_pallas_paper_B8",
+         metric="speedup_vs_a4", min_ratio=0.5),
+    # Fused multi-sweep kernel must keep beating per-sweep launches.
+    dict(bench="kernel", record="kernel_fused_B115", metric="speedup_vs_persweep",
+         min_ratio=0.5),
+)
+
+
+def _fresh_path(bench: str) -> str:
+    return os.path.join(REPO_ROOT, f"BENCH_{bench}.json")
+
+
+def _baseline_path(bench: str) -> str:
+    return os.path.join(BASELINE_DIR, f"{bench}.json")
+
+
+def _load(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        return {r["name"]: r for r in json.load(f)}
+
+
+def load_benches(path_fn) -> dict[str, dict[str, dict]]:
+    out = {}
+    for bench in sorted({t["bench"] for t in THRESHOLDS}):
+        path = path_fn(bench)
+        if not os.path.exists(path):
+            sys.exit(
+                f"check_regression: missing {path} — run "
+                f"`python -m benchmarks.run kernels serve` first"
+                + ("" if path_fn is _fresh_path else
+                   " and commit baselines via --write-baselines")
+            )
+        out[bench] = _load(path)
+    return out
+
+
+def _allowed_bound(t: dict, base_v: float) -> float:
+    """The worst fresh value the gate tolerates for this baseline."""
+    if t.get("direction", "higher") == "lower":
+        return base_v / t["min_ratio"] + t.get("abs_slack", 0.0)
+    return base_v * t["min_ratio"]
+
+
+def check(fresh: dict, baseline: dict) -> list[str]:
+    """Every gated metric's fresh value against its baseline-derived
+    bound; returns human-readable failure lines (empty == gate passes)."""
+    failures = []
+    for t in THRESHOLDS:
+        bench, record, metric = t["bench"], t["record"], t["metric"]
+        where = f"{bench}:{record}:{metric}"
+        base_rec = baseline[bench].get(record)
+        fresh_rec = fresh[bench].get(record)
+        if base_rec is None or metric not in base_rec:
+            failures.append(f"{where}: missing from committed baseline")
+            continue
+        if fresh_rec is None or metric not in fresh_rec:
+            # A gated metric vanishing IS a regression (schema drift would
+            # otherwise un-gate the build silently).
+            failures.append(f"{where}: missing from fresh bench output")
+            continue
+        base_v, fresh_v = float(base_rec[metric]), float(fresh_rec[metric])
+        lower = t.get("direction", "higher") == "lower"
+        if base_v < 0 or (base_v == 0 and not lower):
+            failures.append(f"{where}: unusable baseline value {base_v}")
+            continue
+        bound = _allowed_bound(t, base_v)
+        if lower and fresh_v > bound:
+            failures.append(
+                f"{where}: {fresh_v:.4g} vs baseline {base_v:.4g} "
+                f"(above allowed {bound:.4g}, lower is better)"
+            )
+        elif not lower and fresh_v < bound:
+            failures.append(
+                f"{where}: {fresh_v:.4g} vs baseline {base_v:.4g} "
+                f"(below required {bound:.4g} = {t['min_ratio']:.2f}x baseline)"
+            )
+    return failures
+
+
+def selftest(fresh: dict, baseline: dict) -> int:
+    """Verify the gate TRIPS: degrade each gated metric in turn (in
+    memory) and require a failure for every injection."""
+    missed = []
+    for t in THRESHOLDS:
+        bench, record, metric = t["bench"], t["record"], t["metric"]
+        broken = copy.deepcopy(fresh)
+        rec = broken[bench].get(record)
+        if rec is None or metric not in rec:
+            continue  # the clean gate already reports these
+        base_v = float(baseline[bench][record][metric])
+        bound = _allowed_bound(t, base_v)
+        if t.get("direction", "higher") == "lower":
+            rec[metric] = 2.0 * bound + 1.0  # clearly above the allowance
+        else:
+            rec[metric] = bound / 2.0  # clearly below the requirement
+        hits = [f for f in check(broken, baseline)
+                if f.startswith(f"{bench}:{record}:{metric}:")]
+        if not hits:
+            missed.append(f"{bench}:{record}:{metric}")
+    if missed:
+        print("check_regression --selftest: injected breaches NOT caught:")
+        for m in missed:
+            print(f"  {m}")
+        return 1
+    print(f"check_regression --selftest: all {len(THRESHOLDS)} injected "
+          "breaches tripped the gate")
+    return 0
+
+
+def write_baselines() -> None:
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    for bench in sorted({t["bench"] for t in THRESHOLDS}):
+        src = _fresh_path(bench)
+        if not os.path.exists(src):
+            sys.exit(f"--write-baselines: {src} missing; run the benches first")
+        shutil.copyfile(src, _baseline_path(bench))
+        print(f"wrote {_baseline_path(bench)}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify the gate trips on injected breaches")
+    ap.add_argument("--write-baselines", action="store_true",
+                    help="snapshot fresh BENCH_*.json as the new baselines")
+    args = ap.parse_args(argv)
+    if args.write_baselines:
+        write_baselines()
+        return 0
+    fresh = load_benches(_fresh_path)
+    baseline = load_benches(_baseline_path)
+    if args.selftest:
+        return selftest(fresh, baseline)
+    failures = check(fresh, baseline)
+    if failures:
+        print("check_regression: PERF REGRESSION — gated metrics below "
+              "threshold vs benchmarks/baselines/:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"check_regression: all {len(THRESHOLDS)} gated metrics within "
+          "threshold of baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

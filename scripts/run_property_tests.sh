@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI guard for the property-tests job.
+#
+# The job scopes pytest to the files that actually use hypothesis
+# (discovered by grep, so new @given tests anywhere are picked up
+# automatically).  Running the grep inline in the workflow had two
+# failure modes: under `pipefail` an empty match fails the step on
+# grep's exit code 1, and WITHOUT pipefail an empty substitution makes
+# `pytest -q $(...)` silently run the ENTIRE tier-1 suite a second
+# time.  This script makes "no property files" an explicit, green no-op.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+files=$(grep -rl hypothesis tests --include 'test_*.py' || true)
+if [ -z "$files" ]; then
+  echo "run_property_tests: no test files reference hypothesis; nothing to run"
+  exit 0
+fi
+echo "run_property_tests: $(echo "$files" | wc -l) property test file(s):"
+echo "$files"
+# shellcheck disable=SC2086  # word-splitting the file list is intended
+exec python -m pytest -q $files

@@ -101,6 +101,21 @@ class SweepCarry(NamedTuple):
     rng: jax.Array  # (624, B) | (624, B*V) uint32
 
 
+class ParkedSlot(NamedTuple):
+    """A preempted slot's complete resumable state (`park_slot`).
+
+    ``carry`` is the single-slot `SweepCarry` at the chunk boundary the
+    slot was evicted on; ``tables`` is the slot's single-slot coupling
+    tables on multi-tenant engines (None on single-model engines, where
+    the couplings are engine constants).  Re-splicing both (`resume_slot`)
+    continues the slot's trajectory bit-exactly: the RNG stream position
+    is a pure function of sweeps completed, so an eviction gap is
+    invisible to the resumed chain (DESIGN.md §Scheduling)."""
+
+    carry: SweepCarry
+    tables: dict | None
+
+
 def lane_seeds(batch: int, V: int, seed: int) -> np.ndarray:
     """Per-lane MT19937 seeds for `batch` replicas of `V` interlaced lanes.
 
@@ -615,6 +630,38 @@ class SweepEngine:
 
             self._extract_jit = jax.jit(_extract)
         return self._extract_jit(carry, jnp.int32(b))
+
+    def park_slot(self, carry: SweepCarry, b: int) -> ParkedSlot:
+        """Checkpoint slot ``b`` for preemption: its carry row (and, on a
+        multi-tenant engine, its coupling-table row) as a `ParkedSlot`.
+
+        Pure extraction (`extract_slot` / `extract_slot_tables`) — the
+        slot itself is untouched and keeps idle-resweeping its stale
+        state until the next admission overwrites it.
+        """
+        tables = self.extract_slot_tables(b) if self.multi else None
+        return ParkedSlot(self.extract_slot(carry, b), tables)
+
+    def resume_slot(
+        self,
+        carry: SweepCarry,
+        b: int,
+        parked: ParkedSlot,
+        model: ising.LayeredModel | None = None,
+    ) -> SweepCarry:
+        """Re-splice a `ParkedSlot` into slot ``b`` (any slot — resumption
+        need not reuse the slot the job was evicted from; slot state is
+        position-independent).  The exact inverse of `park_slot`, so a
+        preempted-and-resumed chain is bit-identical to an uninterrupted
+        one.  ``model`` (multi-tenant, optional) records the resumed
+        tables' provenance so later `set_slot_model` calls for the same
+        tenant can no-op."""
+        if self.multi and parked.tables is not None:
+            self.splice_slot_tables(b, parked.tables)
+            if model is not None:
+                check_same_topology(self.model, model)
+                self.models = self.models[:b] + (model,) + self.models[b + 1 :]
+        return self.splice_slot(carry, b, parked.carry)
 
     def set_slot_betas(self, carry: SweepCarry, slots, betas) -> SweepCarry:
         """Rewrite the betas of the given slots (anneal-schedule advance,

@@ -16,7 +16,12 @@ a 3-replica PT job) on a tiny model, < 60 s on CPU.
 The serving default rung is the graph-colored ``cb`` chain (same
 equilibrium as a4, ~20x faster per sweep on the CPU jnp path — ROADMAP
 colored-serving-default); ``--rung a4`` is the escape hatch back to the
-paper's sequential order.
+paper's sequential order.  Admission defaults to the weighted-fair
+priority scheduler (``--policy fair``: priority classes, backfill past
+blocked wide jobs, per-user fairness, checkpoint-preemption — DESIGN.md
+§Scheduling); ``--policy fifo`` restores the plain queue.  Results are
+bit-identical under every policy — scheduling moves WHEN a job runs,
+never what it computes.
 """
 
 from __future__ import annotations
@@ -38,6 +43,8 @@ def build_job_mix(args) -> list:
     jobs = []
     for i in range(args.jobs):
         budget = int(rng.integers(args.budget_min, args.budget_max + 1))
+        user = f"user{i % 3}"  # three tenants sharing the server
+        priority = 1 if i % 5 == 4 else 0  # every 5th job is expedited
         if i % 4 == 3:
             steps = max(2, budget // max(1, args.chunk))
             jobs.append(
@@ -47,6 +54,8 @@ def build_job_mix(args) -> list:
                     beta_end=float(args.beta),
                     steps=steps,
                     sweeps_per_step=max(1, budget // steps),
+                    user=user,
+                    priority=priority,
                 )
             )
         else:
@@ -55,6 +64,8 @@ def build_job_mix(args) -> list:
                     seed=args.seed * 1000 + i,
                     sweeps=budget,
                     beta=float(rng.uniform(0.5, 1.5)),
+                    user=user,
+                    priority=priority,
                 )
             )
     if args.pt_replicas > 0:
@@ -65,6 +76,8 @@ def build_job_mix(args) -> list:
                 betas=betas,
                 num_rounds=args.pt_rounds,
                 sweeps_per_round=max(1, args.chunk // 2),
+                user="ladder",
+                priority=1,  # the wide job: exercises preemption/backfill
             )
         )
     return jobs
@@ -81,6 +94,11 @@ def main(argv=None):
     ap.add_argument("--rung", default="cb",
                     help="sweep rung; the colored 'cb' chain is the serving "
                          "default, --rung a4 restores sequential order")
+    ap.add_argument("--policy", default="fair",
+                    choices=["fifo", "backfill", "fair"],
+                    help="admission policy; weighted-fair priority "
+                         "scheduling is the serving default, --policy fifo "
+                         "restores the plain queue (results are identical)")
     ap.add_argument("--V", type=int, default=4)
     ap.add_argument("--n", type=int, default=8)
     ap.add_argument("--L", type=int, default=16)
@@ -109,6 +127,7 @@ def main(argv=None):
         rung=args.rung,
         backend=args.backend,
         V=args.V,
+        policy=args.policy,
     )
     jobs = build_job_mix(args)
     for job in jobs:
@@ -116,7 +135,7 @@ def main(argv=None):
     print(
         f"serving {len(jobs)} jobs on {args.slots} slots "
         f"(chunk={args.chunk} sweeps, backend={args.backend}, "
-        f"model n={args.n} L={args.L})"
+        f"policy={args.policy}, model n={args.n} L={args.L})"
     )
     t0 = time.perf_counter()
     results = server.drain()
@@ -136,8 +155,21 @@ def main(argv=None):
         f"served {len(results)} jobs in {dt:.2f}s: {jobs_per_sec:.1f} jobs/s, "
         f"{st['busy_slot_sweeps'] / dt:.0f} sweeps/s, "
         f"{flips_per_sec / 1e6:.2f}M spin-flips/s, "
-        f"{st['launches']} launches, utilization {st['utilization']:.0%}"
+        f"{st['launches']} launches, utilization {st['utilization']:.0%} "
+        f"({st['useful_slot_sweeps']} useful / "
+        f"{st['idle_resweep_slot_sweeps']} idle-resweep slot-sweeps), "
+        f"{st['preemptions']} preemptions"
     )
+    qw = st["queue_wait"]
+    if qw["overall"]["count"]:
+        print(
+            f"queue wait p50={qw['overall']['p50_s'] * 1e3:.0f}ms "
+            f"p95={qw['overall']['p95_s'] * 1e3:.0f}ms; per-user p95: "
+            + ", ".join(
+                f"{u}={agg['p95_s'] * 1e3:.0f}ms"
+                for u, agg in sorted(qw["by_user"].items())
+            )
+        )
     if len(results) != len(jobs):
         raise RuntimeError(f"served {len(results)} of {len(jobs)} jobs")
     return results

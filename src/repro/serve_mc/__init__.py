@@ -10,6 +10,21 @@ sweeps is a single (on pallas: fused) launch for all of them.
 """
 
 from repro.serve_mc.jobs import AnnealJob, JobResult, PTJob
-from repro.serve_mc.scheduler import AdaptiveChunker, SampleServer
+from repro.serve_mc.scheduler import (
+    AdaptiveChunker,
+    AdmissionPolicy,
+    PriorityBackfillPolicy,
+    SampleServer,
+    make_policy,
+)
 
-__all__ = ["AdaptiveChunker", "AnnealJob", "PTJob", "JobResult", "SampleServer"]
+__all__ = [
+    "AdaptiveChunker",
+    "AdmissionPolicy",
+    "AnnealJob",
+    "JobResult",
+    "PTJob",
+    "PriorityBackfillPolicy",
+    "SampleServer",
+    "make_policy",
+]

@@ -64,11 +64,31 @@ class _ScheduledJob:
     the carry, so jobs over *different* models of one lattice share fused
     launches.  ``model=None`` means the server's base model — the only
     option on a single-model server.
+
+    ``priority`` and ``user`` feed the server's admission policy
+    (DESIGN.md §Scheduling): higher priority admits first (strict tiers;
+    0 is the default class), and under the fair policy jobs compete for
+    slots per-``user`` (weighted fair ordering), not globally.  Neither
+    affects results — scheduling changes WHEN a job runs, never what it
+    computes (the slot-privacy determinism contract).
+
+    ``parked`` is the job's checkpoint state after a preemption: the list
+    of `engine.ParkedSlot`s (one per occupied slot, in replica order)
+    extracted at the chunk boundary it was evicted on.  Re-admission
+    splices them back instead of calling `init_carries`, resuming the
+    trajectory bit-exactly; segment bookkeeping (`sweeps_done`,
+    ``remaining_in_segment``) simply continues from where it stopped.
     """
 
     num_slots = 1
 
-    def __init__(self, segments: Sequence[int], model: ising.LayeredModel | None = None):
+    def __init__(
+        self,
+        segments: Sequence[int],
+        model: ising.LayeredModel | None = None,
+        priority: int = 0,
+        user: str | None = None,
+    ):
         segments = [int(s) for s in segments]
         if not segments or any(s <= 0 for s in segments):
             raise ValueError(f"segments must be positive sweep counts: {segments}")
@@ -79,6 +99,15 @@ class _ScheduledJob:
         self.chunks = 0
         self.jid: int | None = None  # assigned by SampleServer.submit
         self.model = model
+        self.priority = int(priority)
+        self.user = "default" if user is None else str(user)
+        self.parked: list | None = None  # ParkedSlot per slot while evicted
+        self.preemptions = 0  # times evicted (stats; resume is bit-exact)
+        # Scheduler bookkeeping (set by SampleServer.submit/_place): wall
+        # and sweep-clock stamps for queue-wait reporting.
+        self._submit_time = self._admit_time = None
+        self._submit_sweep = self._admit_sweep = None
+        self._seq = None  # admission-policy submission order
 
     def model_on(self, server) -> ising.LayeredModel:
         """The model this job samples when served by ``server``."""
@@ -132,8 +161,12 @@ class AnnealJob(_ScheduledJob):
         schedule: Sequence[tuple[int, float | None]],
         spins: np.ndarray | None = None,
         model: ising.LayeredModel | None = None,
+        priority: int = 0,
+        user: str | None = None,
     ):
-        super().__init__([s for s, _ in schedule], model=model)
+        super().__init__(
+            [s for s, _ in schedule], model=model, priority=priority, user=user
+        )
         self.seed = int(seed)
         self._betas = [b if b is None else float(b) for _, b in schedule]
         self._init_spins = None if spins is None else np.asarray(spins, np.float32)
@@ -145,8 +178,11 @@ class AnnealJob(_ScheduledJob):
         sweeps: int,
         beta: float | None = None,
         model: ising.LayeredModel | None = None,
+        priority: int = 0,
+        user: str | None = None,
     ):
-        return cls(seed, [(sweeps, beta)], model=model)
+        return cls(seed, [(sweeps, beta)], model=model, priority=priority,
+                   user=user)
 
     @classmethod
     def ramp(
@@ -157,11 +193,14 @@ class AnnealJob(_ScheduledJob):
         steps: int,
         sweeps_per_step: int,
         model: ising.LayeredModel | None = None,
+        priority: int = 0,
+        user: str | None = None,
     ):
         """Linear beta ramp: ``steps`` segments of ``sweeps_per_step``."""
         betas = np.linspace(beta_start, beta_end, steps)
         return cls(
-            seed, [(sweeps_per_step, float(b)) for b in betas], model=model
+            seed, [(sweeps_per_step, float(b)) for b in betas], model=model,
+            priority=priority, user=user,
         )
 
     def _beta(self, server, seg: int) -> float:
@@ -201,7 +240,10 @@ class AnnealJob(_ScheduledJob):
             magnetization=observables.magnetization(spins),
             sweeps_done=self.sweeps_done,
             chunks=self.chunks,
-            extras={"final_beta": float(np.asarray(sub.betas)[0])},
+            extras={
+                "final_beta": float(np.asarray(sub.betas)[0]),
+                "preemptions": self.preemptions,
+            },
         )
 
 
@@ -226,10 +268,15 @@ class PTJob(_ScheduledJob):
         num_rounds: int,
         sweeps_per_round: int = 1,
         model: ising.LayeredModel | None = None,
+        priority: int = 0,
+        user: str | None = None,
     ):
         if num_rounds < 1:
             raise ValueError(f"num_rounds must be >= 1, got {num_rounds}")
-        super().__init__([int(sweeps_per_round)] * int(num_rounds), model=model)
+        super().__init__(
+            [int(sweeps_per_round)] * int(num_rounds), model=model,
+            priority=priority, user=user,
+        )
         self.seed = int(seed)
         self.betas = np.asarray(betas, np.float32)
         self.num_slots = len(self.betas)
@@ -314,5 +361,6 @@ class PTJob(_ScheduledJob):
                 "betas": betas,
                 "swap_accept": int(self.swap_accept),
                 "swap_propose": int(self.swap_propose),
+                "preemptions": self.preemptions,
             },
         )

@@ -9,9 +9,11 @@ many-replica throughput play of Weigel & Yavors'kii, arXiv:1107.5463,
 applied to user jobs).  Between chunks the scheduler does the bookkeeping
 the GPU/TPU never sees:
 
-  admit    pop FIFO jobs while their ``num_slots`` fit in the free list;
-           splice each job's initial per-slot carry (spins, fields, beta,
-           RNG lane columns) into its slots (`SweepEngine.splice_slot`).
+  admit    ask the server's `AdmissionPolicy` which queued jobs enter the
+           free slots (plus which active jobs to checkpoint-preempt for
+           them); splice each admitted job's per-slot carry (spins,
+           fields, beta, RNG lane columns) into its slots
+           (`SweepEngine.splice_slot` / `resume_slot`).
   chunk    ``min(chunk_sweeps, min remaining-in-segment over active
            jobs)`` — chunks never cross a segment boundary, so per-job
            beta schedules and tempering swap points land exactly where a
@@ -35,6 +37,20 @@ position (it is a pure function of sweeps completed), and (c) chunks stop
 at segment boundaries.  Idle slots keep sweeping whatever they last held
 — wasted work, not wrong work; utilization is reported in `stats()`.
 
+Admission is PLUGGABLE (DESIGN.md §Scheduling).  ``policy="fifo"`` is
+the historical queue: strict submission order, head-of-line blocking
+when the head is a wide multi-slot job.  ``policy="backfill"`` adds
+priority classes, EASY backfill (a narrow job may jump a blocked wide
+job iff it provably cannot delay the wide job's reserved start — exact,
+not estimated: sweep budgets are known) and checkpoint-preemption (a
+blocked higher-priority job may evict lower-priority active jobs at a
+chunk boundary; their slots are parked via `SweepEngine.park_slot` and
+resumed bit-exactly later).  ``policy="fair"`` additionally orders each
+priority tier by per-user weighted fairness (deficit-style served-cost
+accounting over user queues), so one heavy user cannot starve others.
+Scheduling decides WHEN a job runs, never what it computes: per-job
+results are bit-identical under every policy.
+
 ``multi_tenant=True`` builds the engine with `SweepEngine.build_multi`:
 each slot additionally owns a row of batched per-slot coupling tables, so
 jobs over DIFFERENT models of one lattice (same topology, different
@@ -49,15 +65,314 @@ on a single-model server (DESIGN.md §Multi-tenancy).
 from __future__ import annotations
 
 import time
-from collections import Counter, deque
+from collections import Counter, defaultdict, deque
 from typing import List
 
 import jax
+import numpy as np
 
 from repro.core import ising
 from repro.core.engine import SweepEngine
 
 from repro.serve_mc.jobs import JobResult
+
+
+# -----------------------------------------------------------------------------
+# Admission policies (DESIGN.md §Scheduling).
+#
+# A policy owns the queue of not-yet-running jobs and, between launches,
+# PLANS one scheduling round: which queued jobs enter the free slots and
+# which active jobs get checkpoint-preempted to make room.  The plan is
+# pure bookkeeping over slot counts and exact remaining sweep budgets
+# (every job's duration is known, not estimated — sampling budgets are
+# deterministic); the server executes it with the engine's slot APIs.
+# Policies never touch carries, so they cannot affect results: a job's
+# spins/energy/RNG are bit-identical under every policy.
+# -----------------------------------------------------------------------------
+
+
+def _job_cost(job) -> int:
+    """Service demand in slot-sweeps (the unit fairness accounts in)."""
+    return job.num_slots * job.total_remaining()
+
+
+class AdmissionPolicy:
+    """FIFO admission: fill free slots in strict submission order.
+
+    The base class doubles as the policy interface: `enqueue` receives
+    submitted (and re-queued preempted) jobs, `plan` returns one round's
+    ``(preempt_jobs, admit_jobs)`` given the free-slot count and the
+    currently active jobs.  FIFO never preempts and never reorders, so a
+    wide job at the queue head blocks everything behind it while slots
+    idle — exactly the utilization leak the priority policies close.
+    """
+
+    name = "fifo"
+
+    def __init__(self):
+        self._queued: list = []
+        self._seq = 0
+
+    def enqueue(self, job) -> None:
+        if getattr(job, "_seq", None) is None:
+            job._seq = self._seq  # preempted jobs keep their original seq
+            self._seq += 1
+        self._queued.append(job)
+        self._queued.sort(key=lambda j: j._seq)
+
+    def __len__(self) -> int:
+        return len(self._queued)
+
+    def jobs(self) -> list:
+        return list(self._queued)
+
+    def plan(self, free: int, active: list) -> tuple[list, list]:
+        admit = []
+        while self._queued and self._queued[0].num_slots <= free:
+            job = self._queued.pop(0)
+            admit.append(job)
+            free -= job.num_slots
+        return [], admit
+
+
+class PriorityBackfillPolicy(AdmissionPolicy):
+    """Priority classes + EASY backfill + checkpoint-preemption, with
+    optional per-user weighted fairness (``policy="fair"``).
+
+    Candidate order: priority tiers are strict (higher first); within a
+    tier, submission order — or, when ``fair=True``, weighted fair order:
+    each user accumulates ``served += cost/weight`` (cost in slot-sweeps)
+    as their jobs are admitted, and the tier is ordered by repeatedly
+    taking the head job of the least-served user (deficit round-robin
+    over user queues: a heavy user's backlog cannot starve a light one,
+    because every admission pushes the heavy user's served level past the
+    light user's).  A user entering the backlog is floored to the least
+    served level of the users already waiting, so idle time cannot be
+    banked into a later monopoly.
+
+    One scheduling round walks the candidates:
+
+    * fits -> admit.
+    * first candidate that does NOT fit: try preemption — evict active
+      jobs of strictly lower priority (lowest first) at this chunk
+      boundary until the candidate fits; eviction parks each slot's
+      carry (and coupling tables) for a later bit-exact resume, so
+      preemption costs placement, never work.  If preemption cannot free
+      enough, the candidate becomes the round's RESERVED job.
+    * after a reservation exists, later candidates only BACKFILL: admit
+      a candidate iff it fits the free list now and either (a) it
+      retires within ``start`` sweeps — the reserved job's provably
+      earliest start, when enough active jobs have retired — or (b) it
+      needs no more than the ``spare`` slots left over at that start.
+      Both are exact slot-count accounting over known budgets, so
+      backfill can NEVER delay the reserved job (tests/test_scheduling).
+
+    Reservation arithmetic (sweeps are the clock; all active slots
+    advance in lockstep): with ``free`` slots free now and active jobs
+    retiring after ``r_i`` more sweeps freeing ``k_i`` slots each, the
+    reserved job (width W) starts at ``start = min r`` with
+    ``free + sum(k_i : r_i <= r) >= W``, and
+    ``spare = free + freed(start) - W``.
+    """
+
+    def __init__(
+        self,
+        *,
+        backfill: bool = True,
+        preempt: bool = True,
+        fair: bool = False,
+        user_weights: dict[str, float] | None = None,
+    ):
+        super().__init__()
+        self.backfill = bool(backfill)
+        self.preempt = bool(preempt)
+        self.fair = bool(fair)
+        self.user_weights = dict(user_weights or {})
+        self.name = "fair" if self.fair else "backfill"
+        self._served: dict[str, float] = {}  # user -> served cost / weight
+
+    def _weight(self, user: str) -> float:
+        w = float(self.user_weights.get(user, 1.0))
+        if w <= 0:
+            raise ValueError(f"user weight must be > 0, got {w} for {user!r}")
+        return w
+
+    def enqueue(self, job) -> None:
+        if self.fair:
+            backlogged = {j.user for j in self._queued}
+            if job.user not in backlogged:
+                # Entering the backlog: floor to the least-served waiting
+                # user so service credit cannot be banked while idle.
+                floor = min(
+                    (self._served.get(u, 0.0) for u in backlogged),
+                    default=0.0,
+                )
+                self._served[job.user] = max(
+                    self._served.get(job.user, 0.0), floor
+                )
+            if len(self._served) > self.SERVED_LEDGER_MAX:
+                # Compact: users with nothing queued re-enter floored
+                # later, so dropping them only forfeits their surplus.
+                keep = backlogged | {job.user}
+                self._served = {
+                    u: v for u, v in self._served.items() if u in keep
+                }
+        super().enqueue(job)
+
+    def _order(self) -> list:
+        """Queued jobs in admission-candidate order."""
+        if not self.fair:
+            return sorted(self._queued, key=lambda j: (-j.priority, j._seq))
+        out = []
+        tiers: dict[int, list] = defaultdict(list)
+        for j in self._queued:
+            tiers[j.priority].append(j)
+        for prio in sorted(tiers, reverse=True):
+            queues: dict[str, deque] = defaultdict(deque)
+            for j in sorted(tiers[prio], key=lambda j: j._seq):
+                queues[j.user].append(j)
+            proj = {u: self._served.get(u, 0.0) for u in queues}
+            while queues:
+                u = min(queues, key=lambda v: (proj[v], v))
+                j = queues[u].popleft()
+                out.append(j)
+                proj[u] += _job_cost(j) / self._weight(u)
+                if not queues[u]:
+                    del queues[u]
+        return out
+
+    #: Bound on the served-cost ledger; past it, users with no queued
+    #: jobs are dropped (they re-enter floored, losing nothing but their
+    #: surplus) so a resident server's memory stays bounded however many
+    #: distinct user ids traffic brings.
+    SERVED_LEDGER_MAX = 10_000
+
+    def _charge(self, job) -> None:
+        """Record an admission for fairness accounting.  Re-admissions of
+        a preempted job are NOT re-charged: its full cost was charged
+        when it first entered, and eviction already costs the user
+        placement time — double-charging would penalize preemption
+        victims twice."""
+        if self.fair and job.parked is None:
+            u = job.user
+            self._served[u] = (
+                self._served.get(u, 0.0) + _job_cost(job) / self._weight(u)
+            )
+
+    @staticmethod
+    def _reservation(job, free: int, running: list) -> tuple[int, int]:
+        """(start, spare) for a blocked ``job``: the exact sweep count at
+        which enough slots will have retired, and the slots left over."""
+        need = job.num_slots - free
+        events = sorted((j.total_remaining(), j.num_slots) for j in running)
+        acc, start = 0, None
+        for r, k in events:
+            acc += k
+            if acc >= need:
+                start = r
+                break
+        assert start is not None, "submit() bounds num_slots by server slots"
+        freed = sum(k for r, k in events if r <= start)
+        return start, free + freed - job.num_slots
+
+    def _pick_victims(self, job, running: list, free: int) -> list | None:
+        """Lowest-priority active jobs to evict so ``job`` fits, or None
+        if even evicting every lower-priority job would not suffice."""
+        need = job.num_slots - free
+        cands = sorted(
+            (v for v in running if v.priority < job.priority),
+            key=lambda v: (v.priority, -v.num_slots, v.jid),
+        )
+        take: list = []
+        got = 0
+        for v in cands:
+            take.append(v)
+            got += v.num_slots
+            if got >= need:
+                break
+        if got < need:
+            return None
+        # Trim overshoot: drop any victim whose slots we don't need
+        # (smallest first), so preemption evicts the minimum set.
+        for v in sorted(take, key=lambda v: (v.num_slots, -v.priority)):
+            if got - v.num_slots >= need:
+                take.remove(v)
+                got -= v.num_slots
+        return take
+
+    def plan(self, free: int, active: list) -> tuple[list, list]:
+        preempt: list = []
+        admit: list = []
+        running = list(active)  # original actives + planned admissions
+        originals = set(id(j) for j in active)
+        reservation = None  # (start_sweeps, spare_slots) of the blocked job
+        for job in self._order():
+            n = job.num_slots
+            if reservation is None:
+                if n <= free:
+                    admit.append(job)
+                    self._charge(job)
+                    free -= n
+                    running.append(job)
+                    continue
+                if self.preempt:
+                    victims = self._pick_victims(
+                        job, [v for v in running if id(v) in originals], free
+                    )
+                    if victims is not None:
+                        for v in victims:
+                            preempt.append(v)
+                            running.remove(v)
+                            originals.discard(id(v))
+                            free += v.num_slots
+                        admit.append(job)
+                        self._charge(job)
+                        free -= n
+                        running.append(job)
+                        continue
+                if not self.backfill:
+                    break
+                reservation = self._reservation(job, free, running)
+                continue
+            # Backfill under the reservation: exact no-delay accounting.
+            start, spare = reservation
+            if n <= free and job.total_remaining() <= start:
+                admit.append(job)  # retires before the reserved start
+                self._charge(job)
+                free -= n
+                running.append(job)
+            elif n <= free and n <= spare:
+                admit.append(job)  # fits the slots the reserved job spares
+                self._charge(job)
+                free -= n
+                reservation = (start, spare - n)
+                running.append(job)
+        for job in admit:
+            self._queued.remove(job)
+        for job in preempt:
+            # Evicted jobs go back in the queue under their ORIGINAL
+            # submission seq, so they re-sort ahead of later arrivals of
+            # the same priority/user and resume as soon as slots free up.
+            self.enqueue(job)
+        return preempt, admit
+
+
+def make_policy(policy, user_weights=None) -> AdmissionPolicy:
+    """``"fifo"`` | ``"backfill"`` | ``"fair"`` | an `AdmissionPolicy`."""
+    if isinstance(policy, AdmissionPolicy):
+        return policy
+    if policy == "fifo":
+        if user_weights:
+            raise ValueError("user_weights only apply to policy='fair'")
+        return AdmissionPolicy()
+    if policy == "backfill":
+        return PriorityBackfillPolicy(fair=False, user_weights=user_weights)
+    if policy == "fair":
+        return PriorityBackfillPolicy(fair=True, user_weights=user_weights)
+    raise ValueError(
+        f"unknown policy {policy!r}; choose 'fifo', 'backfill', 'fair' or "
+        "pass an AdmissionPolicy instance"
+    )
 
 
 class AdaptiveChunker:
@@ -137,7 +452,7 @@ class AdaptiveChunker:
 
 
 class SampleServer:
-    """Schedules a FIFO queue of jobs onto the batch dim of one engine."""
+    """Schedules a queue of jobs onto the batch dim of one engine."""
 
     def __init__(
         self,
@@ -154,6 +469,8 @@ class SampleServer:
         idle_seed: int = 0,
         chunker: AdaptiveChunker | None = None,
         multi_tenant: bool = False,
+        policy="fifo",
+        user_weights: dict[str, float] | None = None,
     ):
         if chunk_sweeps == "adaptive":
             self._chunker = chunker or AdaptiveChunker()
@@ -197,7 +514,7 @@ class SampleServer:
         # a job is spliced over it.
         self.carry = self.engine.init_carry(seed=idle_seed)
         self.chunk_sweeps = None if self._chunker else int(chunk_sweeps)
-        self._queue: deque = deque()
+        self.policy = make_policy(policy, user_weights)
         self._active: dict[int, tuple] = {}  # jid -> (job, slots tuple)
         self._free: list[int] = list(range(slots))
         self._next_jid = 0
@@ -205,8 +522,14 @@ class SampleServer:
         self.launches = 0
         self.busy_slot_sweeps = 0
         self.total_slot_sweeps = 0
+        self.sweeps_elapsed = 0  # the global sweep clock (sum of chunks)
+        self.preemptions = 0
         self.launch_chunks: Counter = Counter()  # chunk size -> launch count
         # (a Counter, not a log: a resident server launches forever)
+        # Queue-wait samples (user, priority, wait_s, wait_sweeps), taken
+        # at FIRST admission; bounded so a resident server never grows it
+        # without limit.
+        self._wait_records: deque = deque(maxlen=100_000)
 
     # -- submission -----------------------------------------------------------
 
@@ -220,7 +543,7 @@ class SampleServer:
 
     @property
     def num_queued(self) -> int:
-        return len(self._queue)
+        return len(self.policy)
 
     def submit(self, job) -> int:
         """Enqueue a job; returns its assigned job id."""
@@ -239,20 +562,65 @@ class SampleServer:
             self.engine.check_model(job.model)  # reject topology mismatch now
         job.jid = self._next_jid
         self._next_jid += 1
-        self._queue.append(job)
+        job._submit_time = time.perf_counter()
+        job._submit_sweep = self.sweeps_elapsed
+        job._admit_time = None
+        self.policy.enqueue(job)
         return job.jid
 
     # -- scheduling -----------------------------------------------------------
 
     def _admit(self) -> None:
-        """FIFO admission: fill free slots from the queue head.  Plain FIFO
-        has head-of-line blocking for wide (multi-slot) jobs; priority
-        admission is a ROADMAP follow-on."""
-        while self._queue and self._queue[0].num_slots <= len(self._free):
-            job = self._queue.popleft()
-            self._free.sort()
-            taken = tuple(self._free[: job.num_slots])
-            del self._free[: job.num_slots]
+        """One planning round: the policy decides, the server executes.
+
+        Every call happens between launches, i.e. at a chunk boundary —
+        the only point where preemption is safe (slot state is a complete
+        checkpoint there) and where admission keeps the determinism
+        contract (the RNG stream position is a pure function of sweeps
+        completed, so WHEN a slot is filled never changes what it
+        computes).
+        """
+        preempts, admits = self.policy.plan(
+            len(self._free), [j for j, _ in self._active.values()]
+        )
+        for job in preempts:
+            self._park(job)
+        for job in admits:
+            self._place(job)
+
+    def _park(self, job) -> None:
+        """Checkpoint-preempt an active job: extract each slot's carry
+        (and coupling tables) into the job's ``parked`` list and free the
+        slots.  The policy has already re-queued the job; re-admission
+        resumes it bit-exactly (`_place`)."""
+        _, taken = self._active.pop(job.jid)
+        job.parked = [self.engine.park_slot(self.carry, b) for b in taken]
+        job.preemptions += 1
+        self.preemptions += 1
+        self._free.extend(taken)
+
+    def _place(self, job) -> None:
+        """Splice a job into free slots: fresh init on first admission,
+        parked-state resume after a preemption."""
+        if job.num_slots > len(self._free):
+            # Guard the public policy extension point: an over-admitting
+            # plan() must fail loudly, not truncate the job's slots (a
+            # short slots tuple would silently corrupt multi-slot jobs).
+            raise RuntimeError(
+                f"policy {self.policy.name!r} admitted job {job.jid} needing "
+                f"{job.num_slots} slots with only {len(self._free)} free"
+            )
+        self._free.sort()
+        taken = tuple(self._free[: job.num_slots])
+        del self._free[: job.num_slots]
+        if job.parked is not None:
+            model = job.model_on(self) if self.multi_tenant else None
+            for b, parked in zip(taken, job.parked):
+                self.carry = self.engine.resume_slot(
+                    self.carry, b, parked, model=model
+                )
+            job.parked = None
+        else:
             for b, slot_carry in zip(taken, job.init_carries(self)):
                 if self.multi_tenant:
                     # The slot sweeps the job's model from now on: splice
@@ -261,7 +629,18 @@ class SampleServer:
                     # tenant's tables never leak into the next job).
                     self.engine.set_slot_model(b, job.model_on(self))
                 self.carry = self.engine.splice_slot(self.carry, b, slot_carry)
-            self._active[job.jid] = (job, taken)
+        if job._admit_time is None:
+            job._admit_time = time.perf_counter()
+            job._admit_sweep = self.sweeps_elapsed
+            self._wait_records.append(
+                (
+                    job.user,
+                    job.priority,
+                    job._admit_time - job._submit_time,
+                    self.sweeps_elapsed - job._submit_sweep,
+                )
+            )
+        self._active[job.jid] = (job, taken)
 
     def step(self) -> List[JobResult]:
         """One scheduling round: admit, one chunked launch, hooks, retire.
@@ -273,7 +652,7 @@ class SampleServer:
             return []
         bound = min(j.remaining_in_segment() for j, _ in self._active.values())
         if self._chunker is not None:
-            chunk = self._chunker.propose(len(self._queue), bound)
+            chunk = self._chunker.propose(len(self.policy), bound)
             t0 = time.perf_counter()
             self.carry = jax.block_until_ready(self.engine.run(self.carry, chunk))
             self._chunker.observe(chunk, time.perf_counter() - t0)
@@ -282,6 +661,7 @@ class SampleServer:
             self.carry = self.engine.run(self.carry, chunk)
         self.launch_chunks[chunk] += 1
         self.launches += 1
+        self.sweeps_elapsed += chunk
         busy = sum(j.num_slots for j, _ in self._active.values())
         self.busy_slot_sweeps += chunk * busy
         self.total_slot_sweeps += chunk * self.slots
@@ -300,17 +680,43 @@ class SampleServer:
         """Run scheduling rounds until queue and slots are empty."""
         results: List[JobResult] = []
         for _ in range(max_steps):
-            if not self._queue and not self._active:
+            if not len(self.policy) and not self._active:
                 return results
             results.extend(self.step())
         raise RuntimeError(f"drain did not converge in {max_steps} steps")
 
     # -- reporting ------------------------------------------------------------
 
+    @staticmethod
+    def _wait_summary(waits: list[float]) -> dict:
+        if not waits:
+            return {"count": 0}
+        arr = np.sort(np.asarray(waits, np.float64))
+        return {
+            "count": int(arr.size),
+            "mean_s": float(arr.mean()),
+            "p50_s": float(np.percentile(arr, 50)),
+            "p95_s": float(np.percentile(arr, 95)),
+            "max_s": float(arr[-1]),
+        }
+
     def stats(self) -> dict:
         n = self.engine.model.num_spins
+        # Utilization split: useful sweeps advanced a resident job; idle
+        # resweeps advanced a free slot's stale state (wasted work, never
+        # wrong work) because the whole batch launches together.
+        useful = self.busy_slot_sweeps
+        idle = self.total_slot_sweeps - useful
+        by_user: dict[str, list] = defaultdict(list)
+        by_priority: dict[int, list] = defaultdict(list)
+        all_waits: list[float] = []
+        for user, priority, wait_s, _wait_sweeps in self._wait_records:
+            by_user[user].append(wait_s)
+            by_priority[priority].append(wait_s)
+            all_waits.append(wait_s)
         return {
             "slots": self.slots,
+            "policy": self.policy.name,
             "launches": self.launches,
             # Distinct chunk sizes == distinct compiled run executables
             # (num_sweeps is a static jit arg); the adaptive chunker keeps
@@ -318,6 +724,10 @@ class SampleServer:
             "distinct_chunks": len(self.launch_chunks),
             "busy_slot_sweeps": self.busy_slot_sweeps,
             "total_slot_sweeps": self.total_slot_sweeps,
+            "useful_slot_sweeps": useful,
+            "idle_resweep_slot_sweeps": idle,
+            "sweeps_elapsed": self.sweeps_elapsed,
+            "preemptions": self.preemptions,
             "utilization": (
                 self.busy_slot_sweeps / self.total_slot_sweeps
                 if self.total_slot_sweeps
@@ -325,4 +735,14 @@ class SampleServer:
             ),
             # One attempted Metropolis update per spin per sweep.
             "spin_flips": self.busy_slot_sweeps * n,
+            # Queue-wait aggregates (first-admission wall wait), overall
+            # and split per user / per priority class, so the scheduling
+            # bench reads its latency numbers straight off stats().
+            "queue_wait": {
+                "overall": self._wait_summary(all_waits),
+                "by_user": {u: self._wait_summary(w) for u, w in by_user.items()},
+                "by_priority": {
+                    p: self._wait_summary(w) for p, w in by_priority.items()
+                },
+            },
         }

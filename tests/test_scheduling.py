@@ -1,0 +1,432 @@
+"""Admission policies: priority, backfill, fairness, checkpoint-preemption.
+
+The three load-bearing claims of DESIGN.md §Scheduling:
+
+* BACKFILL NEVER DELAYS — a narrow job admitted past a blocked wide job
+  cannot push the wide job's start back by even one sweep (the
+  reservation arithmetic is exact, not estimated: budgets are known).
+* NO STARVATION — under the fair policy every submitted job is admitted
+  within a bounded number of sweeps of competing work, however heavy one
+  user's backlog is.
+* PREEMPTION IS FREE (of work) — a checkpoint-preempted job, parked via
+  `SweepEngine.park_slot` and later resumed, finishes bit-identical to
+  an uninterrupted solo run: same spins, energy, and RNG stream, on both
+  rungs, both backends, single- and multi-tenant.
+
+Scheduling must decide WHEN a job runs, never what it computes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ising, reorder, tempering
+from repro.serve_mc import (
+    AdmissionPolicy,
+    AnnealJob,
+    PTJob,
+    PriorityBackfillPolicy,
+    SampleServer,
+    make_policy,
+)
+
+MODEL = ising.random_layered_model(n=5, L=8, seed=1, beta=1.0)
+
+
+def _server(m=MODEL, **kw):
+    kw.setdefault("rung", "a4")
+    kw.setdefault("backend", "jnp")
+    kw.setdefault("V", 4)
+    return SampleServer(m, **kw)
+
+
+def _admit_order(jobs):
+    """Job ids sorted by the sweep-clock instant they were admitted."""
+    return [j.jid for j in sorted(jobs, key=lambda j: (j._admit_sweep, j.jid))]
+
+
+# -----------------------------------------------------------------------------
+# Priority classes.
+# -----------------------------------------------------------------------------
+
+
+def test_priority_admits_higher_class_first():
+    """With one free slot per round, queued jobs admit in priority order,
+    FIFO within a class."""
+    srv = _server(slots=1, chunk_sweeps=2, policy="backfill")
+    lo = AnnealJob.constant(seed=1, sweeps=2, beta=1.0, priority=0)
+    hi = AnnealJob.constant(seed=2, sweeps=2, beta=1.0, priority=2)
+    mid = AnnealJob.constant(seed=3, sweeps=2, beta=1.0, priority=1)
+    hi2 = AnnealJob.constant(seed=4, sweeps=2, beta=1.0, priority=2)
+    for j in (lo, hi, mid, hi2):
+        srv.submit(j)
+    srv.drain()
+    assert _admit_order([lo, hi, mid, hi2]) == [hi.jid, hi2.jid, mid.jid, lo.jid]
+
+
+def test_fifo_policy_ignores_priority():
+    """The default policy is the historical FIFO queue: submission order,
+    no reordering, no preemption."""
+    srv = _server(slots=1, chunk_sweeps=2)  # policy="fifo" default
+    assert srv.stats()["policy"] == "fifo"
+    lo = AnnealJob.constant(seed=1, sweeps=2, beta=1.0, priority=0)
+    hi = AnnealJob.constant(seed=2, sweeps=2, beta=1.0, priority=9)
+    srv.submit(lo)
+    srv.submit(hi)
+    srv.drain()
+    assert _admit_order([lo, hi]) == [lo.jid, hi.jid]
+
+
+# -----------------------------------------------------------------------------
+# Backfill.
+# -----------------------------------------------------------------------------
+
+
+def test_backfill_admits_narrow_past_blocked_wide():
+    """A wide job blocked on free slots must not idle the slots it cannot
+    yet use: a short narrow job jumps it (and a too-long one does not)."""
+    srv = _server(slots=4, chunk_sweeps=2, policy="backfill")
+    a = AnnealJob.constant(seed=1, sweeps=4, beta=1.0)
+    b = AnnealJob.constant(seed=2, sweeps=8, beta=1.0)
+    srv.submit(a)
+    srv.submit(b)
+    srv.step()  # a rem 2, b rem 6; 2 slots free
+    wide = PTJob(seed=3, betas=np.linspace(0.5, 1.5, 4).astype(np.float32),
+                 num_rounds=2, sweeps_per_round=2)
+    # Reservation: wide needs 4, 2 free -> waits for b, start = 6 sweeps
+    # out, spare = 2 + 2 - 4 = 0.
+    short = AnnealJob.constant(seed=4, sweeps=4, beta=0.9)   # 4 <= 6: fits
+    long = AnnealJob.constant(seed=5, sweeps=20, beta=0.9)   # > 6, no spare
+    srv.submit(wide)
+    srv.submit(short)
+    srv.submit(long)
+    srv.step()
+    assert short.jid in srv._active      # backfilled past the blocked wide job
+    assert wide.jid not in srv._active
+    assert long.jid not in srv._active   # would delay the wide job: held back
+    srv.drain()
+    assert _admit_order([wide, long])[0] == wide.jid
+
+
+def test_backfill_never_delays_the_blocked_wide_job():
+    """THE invariant: the wide job starts at exactly the same sweep-clock
+    instant with backfill as without it — the backfilled narrow jobs ran
+    in slots that would otherwise have idled."""
+    def run(policy):
+        srv = _server(slots=4, chunk_sweeps=2, policy=policy)
+        a = AnnealJob.constant(seed=1, sweeps=4, beta=1.0)
+        b = AnnealJob.constant(seed=2, sweeps=8, beta=1.0)
+        srv.submit(a)
+        srv.submit(b)
+        srv.step()
+        wide = PTJob(seed=3, betas=np.linspace(0.5, 1.5, 4).astype(np.float32),
+                     num_rounds=2, sweeps_per_round=2)
+        srv.submit(wide)
+        for s, budget in ((4, 4), (5, 6), (6, 2)):
+            srv.submit(AnnealJob.constant(seed=s, sweeps=budget, beta=0.9))
+        srv.drain()
+        return wide._admit_sweep, srv.stats()
+
+    start_fifo, st_fifo = run("fifo")          # nothing admitted past the head
+    start_bf, st_bf = run("backfill")
+    assert start_bf == start_fifo == 8  # b retires 6 sweeps after blocking at 2
+    # ...and backfill finished the same total work in strictly fewer
+    # global sweeps, i.e. higher slot utilization (that is the point).
+    assert st_bf["useful_slot_sweeps"] == st_fifo["useful_slot_sweeps"]
+    assert st_bf["sweeps_elapsed"] < st_fifo["sweeps_elapsed"]
+    assert st_bf["utilization"] > st_fifo["utilization"]
+
+
+# -----------------------------------------------------------------------------
+# Weighted fairness.
+# -----------------------------------------------------------------------------
+
+
+def test_fair_policy_bounds_starvation():
+    """A light user's job submitted behind a heavy user's backlog is
+    admitted long before that backlog drains."""
+    srv = _server(slots=2, chunk_sweeps=2, policy="fair")
+    heavy = [AnnealJob.constant(seed=10 + i, sweeps=6, beta=1.0, user="heavy")
+             for i in range(6)]
+    for j in heavy:
+        srv.submit(j)
+    srv.step()
+    light = AnnealJob.constant(seed=30, sweeps=6, beta=1.0, user="light")
+    srv.submit(light)
+    srv.drain()
+    heavy_waits = sorted(j._admit_sweep for j in heavy)
+    # The light job overtakes most of the heavy backlog (it cannot
+    # overtake the two already-running jobs).
+    assert light._admit_sweep <= heavy_waits[2]
+    by_user = srv.stats()["queue_wait"]["by_user"]
+    assert by_user["light"]["count"] == 1
+    assert by_user["heavy"]["count"] == 6
+
+
+def test_fair_weights_bias_admission_share():
+    """user_weights=2:1 gives the heavy-weight user ~2/3 of the early
+    admissions (deficit accounting in slot-sweeps / weight)."""
+    srv = _server(slots=1, chunk_sweeps=2, policy="fair",
+                  user_weights={"gold": 2.0, "free": 1.0})
+    gold = [AnnealJob.constant(seed=i, sweeps=6, beta=1.0, user="gold")
+            for i in range(6)]
+    free = [AnnealJob.constant(seed=50 + i, sweeps=6, beta=1.0, user="free")
+            for i in range(6)]
+    for g, f in zip(gold, free):
+        srv.submit(g)
+        srv.submit(f)
+    srv.drain()
+    order = _admit_order(gold + free)
+    gold_jids = {j.jid for j in gold}
+    early_gold = sum(1 for jid in order[:6] if jid in gold_jids)
+    assert early_gold == 4  # 2:1 service ratio -> 4 of the first 6
+
+
+def test_every_job_eventually_runs_under_fair_policy():
+    """Liveness under adversarial mixed traffic: wide + narrow, three
+    users, scattered priorities — drain() terminates with every job
+    admitted and finished exactly once."""
+    rng = np.random.default_rng(7)
+    srv = _server(slots=4, chunk_sweeps=2, policy="fair",
+                  user_weights={"u0": 3.0})
+    jobs = []
+    for i in range(12):
+        user = f"u{i % 3}"
+        prio = int(rng.integers(0, 3))
+        if i % 5 == 4:
+            jobs.append(PTJob(seed=100 + i, num_rounds=2, sweeps_per_round=2,
+                              betas=np.linspace(0.5, 1.2, 3).astype(np.float32),
+                              user=user, priority=prio))
+        else:
+            jobs.append(AnnealJob.constant(seed=100 + i, beta=1.0, user=user,
+                                           sweeps=int(rng.integers(2, 9)),
+                                           priority=prio))
+    for j in jobs:
+        srv.submit(j)
+    results = srv.drain()
+    assert sorted(r.jid for r in results) == [j.jid for j in jobs]
+    assert all(j._admit_sweep is not None for j in jobs)
+
+
+# -----------------------------------------------------------------------------
+# Checkpoint-preemption: park/resume is bit-exact everywhere.
+# -----------------------------------------------------------------------------
+
+
+def _preempt_server_kwargs(backend, rung):
+    if backend == "pallas":
+        m = ising.random_layered_model(n=2, L=256, seed=4, beta=1.0)
+        return m, dict(rung=rung, backend="pallas", V=128, interpret=True)
+    return MODEL, dict(rung=rung, backend="jnp", V=4)
+
+
+@pytest.mark.parametrize("backend,rung", [
+    ("jnp", "a4"), ("jnp", "cb"), ("pallas", "a4"), ("pallas", "cb"),
+])
+@pytest.mark.parametrize("multi_tenant", [False, True])
+def test_preempted_job_bit_equals_uninterrupted_solo(backend, rung, multi_tenant):
+    """Preempt -> park -> resume reproduces the uninterrupted run bit for
+    bit (a4 + cb, jnp + pallas, multi_tenant on/off — the full ISSUE 5
+    matrix)."""
+    m, kw = _preempt_server_kwargs(backend, rung)
+    variant = ising.reseed_couplings(m, seed=9) if multi_tenant else None
+    kw = dict(kw, slots=3, chunk_sweeps=2, multi_tenant=multi_tenant)
+
+    solo = SampleServer(m, **kw)  # fifo, never preempts
+    solo.submit(AnnealJob.constant(seed=7, sweeps=10, beta=1.1, model=variant))
+    (r_solo,) = solo.drain()
+
+    srv = SampleServer(m, policy="backfill", **kw)
+    low = AnnealJob.constant(seed=7, sweeps=10, beta=1.1, model=variant)
+    filler = AnnealJob.constant(seed=8, sweeps=10, beta=0.8)
+    srv.submit(low)
+    srv.submit(filler)
+    srv.step()  # both active (2 of 3 slots), 2 sweeps in
+    hi = PTJob(seed=5, betas=np.linspace(0.5, 1.5, 3).astype(np.float32),
+               num_rounds=2, sweeps_per_round=2, priority=3)
+    srv.submit(hi)  # needs all 3 slots: evicts BOTH low-priority jobs
+    res = {r.jid: r for r in srv.drain()}
+    assert res[low.jid].extras["preemptions"] >= 1
+    np.testing.assert_array_equal(res[low.jid].spins, r_solo.spins)
+    assert res[low.jid].energy == r_solo.energy
+    assert res[low.jid].sweeps_done == r_solo.sweeps_done == 10
+
+
+def test_preempted_rng_stream_matches_solo_mid_flight():
+    """Stronger than final spins: immediately after a resume + one chunk,
+    the slot's raw RNG columns equal the solo run's generator state."""
+    srv = _server(slots=2, chunk_sweeps=2, policy="backfill")
+    low = AnnealJob.constant(seed=7, sweeps=8, beta=1.1)
+    srv.submit(low)
+    srv.submit(AnnealJob.constant(seed=8, sweeps=8, beta=0.5))
+    srv.step()  # low 2 sweeps in
+    hi = PTJob(seed=5, betas=np.linspace(0.5, 1.5, 2).astype(np.float32),
+               num_rounds=1, sweeps_per_round=4, priority=3)
+    srv.submit(hi)
+    srv.step()  # low + filler evicted, hi runs
+    assert low.parked is not None and low.preemptions == 1
+    while low.jid not in srv._active:  # hi retires, low resumes
+        srv.step()
+    (b,) = srv._active[low.jid][1]
+    sub = srv.engine.extract_slot(srv.carry, b)
+
+    solo = _server(slots=1, chunk_sweeps=2)
+    solo.submit(AnnealJob.constant(seed=7, sweeps=8, beta=1.1))
+    done = low.sweeps_done
+    for _ in range(done // 2):
+        solo.step()
+    np.testing.assert_array_equal(np.asarray(sub.rng), np.asarray(solo.carry.rng))
+    np.testing.assert_array_equal(np.asarray(sub.spins),
+                                  np.asarray(solo.carry.spins))
+
+
+def test_preempted_pt_job_bit_equals_standalone_driver():
+    """A PTJob evicted mid-ladder (multi-slot park: R carries + swap state
+    on the job) still reproduces tempering.run_parallel_tempering."""
+    m = ising.random_layered_model(n=4, L=8, seed=2, beta=1.0)
+    betas = np.linspace(0.4, 1.4, 2).astype(np.float32)
+    rounds, spr = 4, 2
+    state, _ = tempering.run_parallel_tempering(
+        m, betas, rounds, V=4, seed=5, sweeps_per_round=spr, backend="jnp"
+    )
+    want = np.stack(
+        [reorder.from_lane(np.asarray(s), m.n, m.L, 4) for s in state.spins]
+    )
+    srv = SampleServer(m, slots=3, chunk_sweeps=2, rung="a4", backend="jnp",
+                       V=4, policy="backfill")
+    pt = PTJob(seed=5, betas=betas, num_rounds=rounds, sweeps_per_round=spr)
+    srv.submit(pt)
+    srv.step()  # one round done
+    hi = PTJob(seed=9, betas=np.linspace(0.5, 1.5, 3).astype(np.float32),
+               num_rounds=1, sweeps_per_round=2, priority=5)
+    srv.submit(hi)  # needs all 3 slots: evicts the low-priority ladder
+    res = {r.jid: r for r in srv.drain()}
+    assert res[pt.jid].extras["preemptions"] >= 1
+    np.testing.assert_array_equal(res[pt.jid].spins, want)
+    np.testing.assert_array_equal(res[pt.jid].extras["betas"],
+                                  np.asarray(state.betas))
+    assert res[pt.jid].extras["swap_propose"] == int(state.swap_propose)
+    assert res[pt.jid].extras["swap_accept"] == int(state.swap_accept)
+
+
+def test_preemption_requires_strictly_higher_priority():
+    """Equal-priority wide jobs wait (reservation), they do not evict."""
+    srv = _server(slots=2, chunk_sweeps=2, policy="backfill")
+    a = AnnealJob.constant(seed=1, sweeps=6, beta=1.0, priority=1)
+    srv.submit(a)
+    srv.step()
+    wide = PTJob(seed=2, betas=np.linspace(0.5, 1.5, 2).astype(np.float32),
+                 num_rounds=1, sweeps_per_round=2, priority=1)
+    srv.submit(wide)
+    srv.drain()
+    assert srv.preemptions == 0
+    assert a.preemptions == 0
+
+
+# -----------------------------------------------------------------------------
+# Results never depend on the policy.
+# -----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["backfill", "fair"])
+def test_results_bit_identical_across_policies(policy):
+    """The same adversarial job mix under FIFO and under the new policies
+    retires in a different ORDER but with bit-identical per-job results."""
+    def jobs():
+        mix = [AnnealJob.constant(seed=40 + i, sweeps=3 + 2 * (i % 4),
+                                  beta=0.8 + 0.1 * i, user=f"u{i % 2}",
+                                  priority=i % 3)
+               for i in range(6)]
+        mix.append(PTJob(seed=60, betas=np.linspace(0.5, 1.2, 3).astype(np.float32),
+                         num_rounds=2, sweeps_per_round=2, priority=1))
+        return mix
+
+    def run(pol):
+        srv = _server(slots=3, chunk_sweeps=2, policy=pol)
+        js = jobs()
+        for j in js:
+            srv.submit(j)
+        return {r.jid: r for r in srv.drain()}
+
+    base, other = run("fifo"), run(policy)
+    assert sorted(base) == sorted(other)
+    for jid in base:
+        np.testing.assert_array_equal(base[jid].spins, other[jid].spins)
+        np.testing.assert_array_equal(np.asarray(base[jid].energy),
+                                      np.asarray(other[jid].energy))
+
+
+# -----------------------------------------------------------------------------
+# Stats + validation.
+# -----------------------------------------------------------------------------
+
+
+def test_stats_utilization_split_and_queue_waits():
+    srv = _server(slots=4, chunk_sweeps=2, policy="fair")
+    srv.submit(AnnealJob.constant(seed=0, sweeps=4, beta=1.0, user="a"))
+    srv.submit(AnnealJob.constant(seed=1, sweeps=4, beta=1.0, user="b",
+                                  priority=2))
+    srv.drain()
+    st = srv.stats()
+    assert st["useful_slot_sweeps"] == st["busy_slot_sweeps"] == 8
+    assert (st["useful_slot_sweeps"] + st["idle_resweep_slot_sweeps"]
+            == st["total_slot_sweeps"])
+    qw = st["queue_wait"]
+    assert qw["overall"]["count"] == 2
+    assert set(qw["by_user"]) == {"a", "b"}
+    assert set(qw["by_priority"]) == {0, 2}
+    for agg in (qw["overall"], qw["by_user"]["a"], qw["by_priority"][2]):
+        if agg["count"]:
+            assert 0.0 <= agg["p50_s"] <= agg["p95_s"] <= agg["max_s"]
+
+
+def test_preempted_job_not_double_charged_by_fairness():
+    """Eviction already costs a user placement time; the served-cost
+    ledger must charge a job once (at first admission), not again at the
+    post-preemption resume."""
+    srv = _server(slots=2, chunk_sweeps=2, policy="fair")
+    low = AnnealJob.constant(seed=1, sweeps=8, beta=1.0, user="victim")
+    srv.submit(low)
+    srv.step()
+    served_after_admit = srv.policy._served["victim"]
+    hi = PTJob(seed=2, betas=np.linspace(0.5, 1.5, 2).astype(np.float32),
+               num_rounds=1, sweeps_per_round=2, priority=3, user="vip")
+    srv.submit(hi)
+    srv.drain()
+    assert low.preemptions == 1  # it WAS evicted and resumed
+    assert srv.policy._served["victim"] == served_after_admit
+
+
+def test_place_rejects_over_admitting_policy():
+    """A custom plan() that admits a job wider than the free list must
+    fail loudly, never truncate the job's slot set."""
+    class OverAdmit(AdmissionPolicy):
+        def plan(self, free, active):
+            admit, self._queued = self._queued, []
+            return [], admit  # everything at once, ignoring slot counts
+
+    srv = _server(slots=2, chunk_sweeps=2, policy=OverAdmit())
+    srv.submit(AnnealJob.constant(seed=1, sweeps=4, beta=1.0))
+    srv.submit(AnnealJob.constant(seed=2, sweeps=4, beta=1.0))
+    srv.submit(AnnealJob.constant(seed=3, sweeps=4, beta=1.0))
+    with pytest.raises(RuntimeError, match="slots"):
+        srv.step()
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="policy"):
+        _server(slots=1, policy="lifo")
+    with pytest.raises(ValueError, match="user_weights"):
+        _server(slots=1, policy="fifo", user_weights={"a": 2.0})
+    with pytest.raises(ValueError, match="weight"):
+        srv = _server(slots=1, chunk_sweeps=2, policy="fair",
+                      user_weights={"a": 0.0})
+        srv.submit(AnnealJob.constant(seed=0, sweeps=2, user="a"))
+        srv.submit(AnnealJob.constant(seed=1, sweeps=2, user="b"))
+        srv.drain()
+    # A custom AdmissionPolicy instance passes straight through.
+    pol = PriorityBackfillPolicy(fair=False, preempt=False)
+    srv = _server(slots=1, chunk_sweeps=2, policy=pol)
+    assert srv.policy is pol
+    assert make_policy("fifo").name == "fifo"
+    assert isinstance(make_policy("backfill"), PriorityBackfillPolicy)
+    assert issubclass(PriorityBackfillPolicy, AdmissionPolicy)
