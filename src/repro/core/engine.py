@@ -56,18 +56,34 @@ engine's precomputed model tables.  The engine wraps the returned function
 in one persistent ``jax.jit`` (num_sweeps static), so repeated `run` calls
 hit the compile cache — the steady-state benchmarking contract that
 `metropolis.make_sweeper` used to provide.
+
+MESH-SHARDED engines (``build(..., mesh=...)`` / ``build_multi(...,
+mesh=...)``) extend the same layout story one level up (DESIGN.md §Mesh):
+the batch axis of the carry — spins, fields, betas, RNG state columns —
+and the per-slot coupling tables shard over a 1-D ``("data",)`` mesh, and
+`run` becomes one `shard_map` whose per-device body is the UNMODIFIED
+single-device builder at ``batch = B/D``.  Slots are independent (separate
+carry rows, separate MT19937 lane columns), so the sweep hot path has
+zero cross-device traffic and sharded-vs-single-device execution is
+bit-exact (tests/test_sharded.py).  Slot APIs keep addressing GLOBAL slot
+indices — GSPMD resolves the (device, local slot) placement — so the
+serving layer works unmodified over the enlarged pool.
 """
 
 from __future__ import annotations
 
 from typing import Callable, NamedTuple
 
+import copy
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import ising, metropolis, mt19937 as mt, reorder
+from repro.sharding.ctx import shard_map
 
 f32 = jnp.float32
 
@@ -219,6 +235,7 @@ class SweepEngine:
         replica_tile: int | None = None,
         models: tuple | None = None,
         slot_tables: dict | None = None,
+        mesh: Mesh | None = None,
     ):
         self.model = model
         self.rung = rung
@@ -230,22 +247,32 @@ class SweepEngine:
         self.tables = tables
         self.replica_tile = replica_tile
         self.rows = tables.get("rows")  # lane rungs only
+        self.mesh = mesh
+        if mesh is not None:
+            self._validate_mesh(mesh, batch, replica_tile)
         # Multi-tenant state (`build_multi`): per-slot models and their
         # batched coupling tables, fed to the run jit as ARGUMENTS so one
         # executable serves any model mix sharing the engine's topology.
         self.multi = models is not None
         self.models = models
         self.slot_tables = slot_tables
+        if mesh is not None and slot_tables is not None:
+            self.slot_tables = jax.device_put(slot_tables, self._table_shardings())
         if self.multi:
             builder = _MULTI_BACKENDS[backend]
-            self._run_jit = jax.jit(builder(self), static_argnums=(2,))
+            body = builder(self._local_view()) if mesh is not None else builder(self)
+            run = self._sharded_run_multi(body) if mesh is not None else body
+            self._run_jit = jax.jit(run, static_argnums=(2,))
         else:
             builder = _BACKENDS[backend]
-            self._run_jit = jax.jit(builder(self), static_argnums=(1,))
+            body = builder(self._local_view()) if mesh is not None else builder(self)
+            run = self._sharded_run(body) if mesh is not None else body
+            self._run_jit = jax.jit(run, static_argnums=(1,))
         self._splice_jit = None  # built lazily on first splice_slot
         self._extract_jit = None
         self._splice_tables_jit = None
         self._extract_tables_jit = None
+        self._energies_jit = None
         # Per-model slot-table cache: admission is on the serving fast
         # path and a server's tenant set recurs, so a model's tables are
         # uploaded once, not per admit.  Models are kept strongly
@@ -266,9 +293,13 @@ class SweepEngine:
         exp_flavor: str | None = None,
         interpret: bool | None = None,
         replica_tile: int | None = None,
+        mesh: Mesh | None = None,
     ) -> "SweepEngine":
         """``replica_tile`` (pallas only) sizes the kernel's resident
-        replica group to VMEM — must divide ``batch``; None = all of it."""
+        replica group to VMEM — must divide ``batch``; None = all of it.
+        ``mesh`` (a 1-D ``("data",)`` mesh, e.g. `launch.mesh.make_slot_mesh`)
+        shards the batch axis over its D devices — ``batch`` stays the
+        GLOBAL slot count and must divide by D."""
         if rung not in RUNGS:
             raise ValueError(f"unknown rung {rung!r}; choose from {RUNGS}")
         if backend not in _BACKENDS:
@@ -296,7 +327,7 @@ class SweepEngine:
         cls._validate_backend_opts(rung, backend, V, batch, replica_tile)
         return cls(
             model, rung, backend, batch, V, exp_flavor, interpret, tables,
-            replica_tile,
+            replica_tile, mesh=mesh,
         )
 
     @staticmethod
@@ -345,6 +376,156 @@ class SweepEngine:
         elif replica_tile is not None:
             raise ValueError("replica_tile is a pallas-backend knob")
 
+    # -- mesh sharding (DESIGN.md §Mesh) --------------------------------------
+    #
+    # A sharded engine lays the batch axis out as [D, B/D] over the mesh's
+    # "data" axis.  Slots are already independent (own carry rows, own
+    # MT19937 lane columns — the twist is row-wise, never cross-column), so
+    # the per-device body of `run` is the existing single-device builder at
+    # ``batch = B/D`` and the hot path needs no collectives: sharded
+    # execution is bit-exact with the D=1 engine by construction.
+
+    @staticmethod
+    def _validate_mesh(mesh: Mesh, batch: int, replica_tile: int | None) -> None:
+        if "data" not in mesh.shape:
+            raise ValueError(
+                f'engine meshes need a "data" axis; got {dict(mesh.shape)}'
+            )
+        extra = {a: s for a, s in mesh.shape.items() if a != "data" and s != 1}
+        if extra:
+            raise ValueError(
+                "engine slots shard over the \"data\" axis only; mesh has "
+                f"non-trivial axes {extra}"
+            )
+        D = mesh.shape["data"]
+        if batch % D != 0:
+            raise ValueError(
+                f"batch {batch} must divide evenly over {D} devices"
+            )
+        if replica_tile is not None and (batch // D) % replica_tile != 0:
+            raise ValueError(
+                f"replica_tile {replica_tile} must divide the per-device "
+                f"batch {batch // D}"
+            )
+
+    def _local_view(self) -> "SweepEngine":
+        """A shallow copy with the PER-DEVICE batch.  Backend builders
+        close over ``eng.batch`` (uniform reshapes, kernel grids); under
+        `shard_map` the body sees local shards, so it must be built for
+        ``B/D`` slots.  Everything else (model, tables, rung, flavor) is
+        shared by reference — the builders treat them as read-only."""
+        loc = copy.copy(self)
+        loc.batch = self.batch // self.mesh.shape["data"]
+        loc.mesh = None
+        return loc
+
+    def _carry_pspecs(self) -> SweepCarry:
+        """PartitionSpecs laying the carry's batch axis over "data": rows
+        of spins/fields/betas shard directly; the RNG state (624, B*lanes)
+        shards its COLUMN axis — slot b's lane columns land on the device
+        that owns row b, because both are contiguous [D, B/D(*lanes)]
+        blocks of the same slot order."""
+        row = P("data", *([None] * (2 if self.rung in LANE_RUNGS else 1)))
+        return SweepCarry(row, row, row, P("data"), P(None, "data"))
+
+    def _carry_shardings(self) -> SweepCarry:
+        return SweepCarry(
+            *(NamedSharding(self.mesh, s) for s in self._carry_pspecs())
+        )
+
+    def _table_pspecs(self):
+        return jax.tree_util.tree_map(
+            lambda x: P("data", *([None] * (x.ndim - 1))), self.slot_tables
+        )
+
+    def _table_shardings(self):
+        return jax.tree_util.tree_map(
+            lambda x: NamedSharding(self.mesh, P("data", *([None] * (x.ndim - 1)))),
+            self.slot_tables,
+        )
+
+    def _sharded_run(self, body: Callable) -> Callable:
+        """Wrap a per-device run body in `shard_map`: one call advances all
+        D*B/D slots with zero cross-device traffic (the body is closed over
+        ``num_sweeps`` so the static argument never crosses the shard_map
+        boundary; each chunk size still compiles once)."""
+        specs, mesh = self._carry_pspecs(), self.mesh
+
+        def run(carry: SweepCarry, num_sweeps: int) -> SweepCarry:
+            f = shard_map(
+                lambda c: body(c, num_sweeps), mesh,
+                in_specs=(specs,), out_specs=specs,
+            )
+            return f(carry)
+
+        return run
+
+    def _sharded_run_multi(self, body: Callable) -> Callable:
+        specs, tab_specs, mesh = (
+            self._carry_pspecs(), self._table_pspecs(), self.mesh,
+        )
+
+        def run(carry: SweepCarry, tabs: dict, num_sweeps: int) -> SweepCarry:
+            f = shard_map(
+                lambda c, tb: body(c, tb, num_sweeps), mesh,
+                in_specs=(specs, tab_specs), out_specs=specs,
+            )
+            return f(carry, tabs)
+
+        return run
+
+    def slot_energies(self, carry: SweepCarry) -> jax.Array:
+        """Per-slot energies (B,) of the carry's spins, computed
+        device-locally (lane rungs only).
+
+        The cross-device tempering path (`tempering.swap_phase_from_energies`)
+        gathers ONLY these B scalars: each device evaluates
+        `tempering.lane_energy` over its own slot rows — its own coupling
+        rows on a multi-tenant engine — so a PT ladder spanning devices
+        exchanges O(R) floats per swap phase, never spins.  Unsharded
+        engines take the plain vmap path; both are the same expression
+        `swap_phase` evaluates internally, hence bit-identical to it.
+        """
+        if self.rung not in LANE_RUNGS:
+            raise ValueError(
+                f"slot_energies is defined for lane rungs {LANE_RUNGS}; "
+                f"got rung={self.rung!r}"
+            )
+        if self._energies_jit is None:
+            from repro.core import tempering  # deferred: tempering imports us
+
+            t, n = self.tables, self.model.n
+            nbr = t["base_nbr"]
+
+            if self.multi:
+                def local(spins, tabs):
+                    return jax.vmap(
+                        lambda sp, h, bJ, tJ: tempering.lane_energy(
+                            sp, h, nbr, bJ, tJ, n
+                        )
+                    )(spins, tabs["h"], tabs["base_J"], tabs["tau_J"])
+            else:
+                h, bJ, tJ = t["h"], t["base_J"], t["tau_J"]
+
+                def local(spins):
+                    return jax.vmap(
+                        lambda sp: tempering.lane_energy(sp, h, nbr, bJ, tJ, n)
+                    )(spins)
+
+            fn = local
+            if self.mesh is not None:
+                sp_spec = self._carry_pspecs().spins
+                in_specs = (
+                    (sp_spec, self._table_pspecs()) if self.multi else (sp_spec,)
+                )
+                fn = shard_map(
+                    local, self.mesh, in_specs=in_specs, out_specs=P("data")
+                )
+            self._energies_jit = jax.jit(fn)
+        if self.multi:
+            return self._energies_jit(carry.spins, self.slot_tables)
+        return self._energies_jit(carry.spins)
+
     @classmethod
     def build_multi(
         cls,
@@ -356,6 +537,7 @@ class SweepEngine:
         exp_flavor: str | None = None,
         interpret: bool | None = None,
         replica_tile: int | None = None,
+        mesh: Mesh | None = None,
     ) -> "SweepEngine":
         """A MULTI-TENANT engine: one slot per entry of ``models``, each
         slot sweeping its own model's couplings/fields in the same fused
@@ -396,7 +578,7 @@ class SweepEngine:
         )
         return cls(
             base, rung, backend, batch, V, exp_flavor, interpret, tables,
-            replica_tile, models=models, slot_tables=slot_tables,
+            replica_tile, models=models, slot_tables=slot_tables, mesh=mesh,
         )
 
     # -- lifecycle ------------------------------------------------------------
@@ -457,7 +639,10 @@ class SweepEngine:
             ]
             rng = mt.mt_init(lane_seeds(B, self.V, seed))
         stacked = [jnp.stack([s[i] for s in states]) for i in range(3)]
-        return SweepCarry(*stacked, betas=betas, rng=rng)
+        carry = SweepCarry(*stacked, betas=betas, rng=rng)
+        if self.mesh is not None:
+            carry = jax.device_put(carry, self._carry_shardings())
+        return carry
 
     def run(self, carry: SweepCarry, num_sweeps: int) -> SweepCarry:
         """Advance every replica by ``num_sweeps`` Metropolis sweeps.
@@ -605,7 +790,15 @@ class SweepEngine:
                     upd(carry.rng, slot.rng, b * lanes, 1),
                 )
 
-            self._splice_jit = jax.jit(_splice)
+            # On a sharded engine the updated carry must STAY sharded:
+            # without pinned out_shardings GSPMD may materialise the
+            # scatter's result replicated, silently de-sharding the pool.
+            kw = (
+                {"out_shardings": self._carry_shardings()}
+                if self.mesh is not None
+                else {}
+            )
+            self._splice_jit = jax.jit(_splice, **kw)
         return self._splice_jit(carry, jnp.int32(b), slot)
 
     def extract_slot(self, carry: SweepCarry, b: int) -> SweepCarry:
@@ -668,7 +861,10 @@ class SweepEngine:
         tempering swaps) without touching spins, fields, or RNG."""
         idx = jnp.asarray(np.asarray(slots, np.int32))
         vals = jnp.asarray(betas, f32)
-        return carry._replace(betas=carry.betas.at[idx].set(vals))
+        new = carry.betas.at[idx].set(vals)
+        if self.mesh is not None:  # keep the betas row sharded
+            new = jax.device_put(new, NamedSharding(self.mesh, P("data")))
+        return carry._replace(betas=new)
 
     # -- per-slot model tables (the multi-tenant admit API) --------------------
     #
@@ -732,7 +928,12 @@ class SweepEngine:
                     slot,
                 )
 
-            self._splice_tables_jit = jax.jit(_splice)
+            kw = (
+                {"out_shardings": self._table_shardings()}
+                if self.mesh is not None
+                else {}
+            )
+            self._splice_tables_jit = jax.jit(_splice, **kw)
         self.slot_tables = self._splice_tables_jit(
             self.slot_tables, jnp.int32(b), slot
         )

@@ -146,6 +146,43 @@ def draw_swap_uniforms(swap_rng: jax.Array, num_replicas: int):
     return mt19937.mt_uniforms_count(swap_rng, npairs)
 
 
+def _swap_decide(
+    betas: jax.Array,  # (R,)
+    energies: jax.Array,  # (R,)
+    swap_rng: jax.Array,
+    swap_accept: jax.Array,
+    swap_propose: jax.Array,
+    swap_parity: jax.Array,
+    exp_fn,
+):
+    """The swap decision given per-replica energies — the single body both
+    `swap_phase` (which computes energies itself) and
+    `swap_phase_from_energies` (which receives them, e.g. gathered from a
+    mesh-sharded engine) run, so the two entry points are bit-identical by
+    construction.  Returns (betas, swap_rng, swap_accept, swap_propose)."""
+    R = betas.shape[0]
+    swap_rng, su = draw_swap_uniforms(swap_rng, R)
+    # Propose swaps between (i, i+1) for i of the given parity.
+    idx = jnp.arange(R)
+    is_left = (idx % 2 == swap_parity) & (idx + 1 < R)
+    partner = jnp.where(
+        is_left, idx + 1, jnp.where((idx % 2) != swap_parity, idx - 1, idx)
+    )
+    partner = jnp.clip(partner, 0, R - 1)
+    valid = partner != idx
+    d_beta = betas - betas[partner]
+    d_e = energies - energies[partner]
+    p_acc = exp_fn(jnp.clip(d_beta * d_e, -20.0, 0.0))  # min(1, exp(.))
+    u_pair = su[idx // 2]  # one fresh uniform per pair, no index wrap
+    u_pair = jnp.where(is_left, u_pair, u_pair[partner])  # shared within pair
+    accept = valid & (u_pair < p_acc)
+    # Betas move between replica slots; spins stay put.
+    new_betas = jnp.where(accept, betas[partner], betas)
+    n_acc = jnp.sum(accept.astype(jnp.int32)) // 2
+    n_prop = jnp.sum((valid & is_left).astype(jnp.int32))
+    return new_betas, swap_rng, swap_accept + n_acc, swap_propose + n_prop
+
+
 @functools.partial(jax.jit, static_argnames=("n", "exp_flavor"))
 def swap_phase(
     state: PTState,
@@ -158,35 +195,38 @@ def swap_phase(
     exp_flavor: str = "fast",
 ) -> PTState:
     """One even/odd round of adjacent-temperature swap proposals."""
-    R = state.betas.shape[0]
-    exp_fn = EXP_FNS[exp_flavor]
     energies = jax.vmap(
         lambda s: lane_energy(s, h, base_nbr, base_J, tau_J, n)
     )(state.spins)
-    swap_rng, su = draw_swap_uniforms(state.swap_rng, R)
-    # Propose swaps between (i, i+1) for i of the given parity.
-    idx = jnp.arange(R)
-    is_left = (idx % 2 == swap_parity) & (idx + 1 < R)
-    partner = jnp.where(
-        is_left, idx + 1, jnp.where((idx % 2) != swap_parity, idx - 1, idx)
+    betas, swap_rng, acc, prop = _swap_decide(
+        state.betas, energies, state.swap_rng, state.swap_accept,
+        state.swap_propose, swap_parity, EXP_FNS[exp_flavor],
     )
-    partner = jnp.clip(partner, 0, R - 1)
-    valid = partner != idx
-    d_beta = state.betas - state.betas[partner]
-    d_e = energies - energies[partner]
-    p_acc = exp_fn(jnp.clip(d_beta * d_e, -20.0, 0.0))  # min(1, exp(.))
-    u_pair = su[idx // 2]  # one fresh uniform per pair, no index wrap
-    u_pair = jnp.where(is_left, u_pair, u_pair[partner])  # shared within pair
-    accept = valid & (u_pair < p_acc)
-    # Betas move between replica slots; spins stay put.
-    new_betas = jnp.where(accept, state.betas[partner], state.betas)
-    n_acc = jnp.sum(accept.astype(jnp.int32)) // 2
-    n_prop = jnp.sum((valid & is_left).astype(jnp.int32))
     return state._replace(
-        betas=new_betas,
-        swap_rng=swap_rng,
-        swap_accept=state.swap_accept + n_acc,
-        swap_propose=state.swap_propose + n_prop,
+        betas=betas, swap_rng=swap_rng, swap_accept=acc, swap_propose=prop
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("exp_flavor",))
+def swap_phase_from_energies(
+    betas: jax.Array,  # (R,)
+    energies: jax.Array,  # (R,) per-replica energies of the current spins
+    swap_rng: jax.Array,
+    swap_accept: jax.Array,
+    swap_propose: jax.Array,
+    swap_parity: jax.Array,
+    exp_flavor: str = "fast",
+):
+    """`swap_phase` for callers that already hold per-replica energies —
+    the cross-device path: a mesh-sharded engine computes energies
+    device-locally (`SweepEngine.slot_energies`), only the (R,) scalars
+    cross devices, and this decides the beta exchanges.  Same `_swap_decide`
+    body as `swap_phase`, so a ladder spanning devices swaps bit-identically
+    to a resident single-device one.  Returns
+    ``(betas, swap_rng, swap_accept, swap_propose)``."""
+    return _swap_decide(
+        betas, energies, swap_rng, swap_accept, swap_propose, swap_parity,
+        EXP_FNS[exp_flavor],
     )
 
 

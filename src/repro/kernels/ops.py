@@ -3,6 +3,12 @@
 ``interpret=None`` auto-selects: Pallas compiled path on TPU backends,
 interpret mode (Python-evaluated kernel bodies) everywhere else — this is
 how the kernels are validated on CPU per the project contract.
+
+Every entry point derives the batch extent from its input shapes (no
+baked-in global B), which is what lets the mesh-sharded engine (DESIGN.md
+§Mesh) reuse these kernels UNCHANGED as per-device ``shard_map`` bodies:
+inside the map each device sees the local (B/D, ...) block and the kernel
+neither knows nor cares that it is one shard of a larger slot pool.
 """
 
 from __future__ import annotations

@@ -22,6 +22,11 @@ blocked wide jobs, per-user fairness, checkpoint-preemption — DESIGN.md
 §Scheduling); ``--policy fifo`` restores the plain queue.  Results are
 bit-identical under every policy — scheduling moves WHEN a job runs,
 never what it computes.
+
+``--devices D`` shards the slot pool over a D-device ("data",) mesh
+(DESIGN.md §Mesh): slots must divide evenly and results stay bit-identical
+to ``--devices 0`` (no mesh).  On a CPU-only host, force visible devices
+first: ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
 """
 
 from __future__ import annotations
@@ -99,6 +104,10 @@ def main(argv=None):
                     help="admission policy; weighted-fair priority "
                          "scheduling is the serving default, --policy fifo "
                          "restores the plain queue (results are identical)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard the slot pool over this many devices on a "
+                         "('data',) mesh; 0 = single-device (no mesh). "
+                         "Results are bit-identical either way.")
     ap.add_argument("--V", type=int, default=4)
     ap.add_argument("--n", type=int, default=8)
     ap.add_argument("--L", type=int, default=16)
@@ -120,6 +129,11 @@ def main(argv=None):
     model = ising.random_layered_model(
         n=args.n, L=args.L, seed=args.seed, beta=args.beta
     )
+    mesh = None
+    if args.devices > 0:
+        from repro.launch.mesh import make_slot_mesh
+
+        mesh = make_slot_mesh(args.devices)
     server = SampleServer(
         model,
         slots=args.slots,
@@ -128,14 +142,16 @@ def main(argv=None):
         backend=args.backend,
         V=args.V,
         policy=args.policy,
+        mesh=mesh,
     )
     jobs = build_job_mix(args)
     for job in jobs:
         server.submit(job)
+    dev = f", mesh={args.devices} devices" if mesh is not None else ""
     print(
         f"serving {len(jobs)} jobs on {args.slots} slots "
         f"(chunk={args.chunk} sweeps, backend={args.backend}, "
-        f"policy={args.policy}, model n={args.n} L={args.L})"
+        f"policy={args.policy}, model n={args.n} L={args.L}{dev})"
     )
     t0 = time.perf_counter()
     results = server.drain()
@@ -169,6 +185,15 @@ def main(argv=None):
                 f"{u}={agg['p95_s'] * 1e3:.0f}ms"
                 for u, agg in sorted(qw["by_user"].items())
             )
+        )
+    recent = st["queue_wait_recent"]
+    if recent["count"]:
+        print(
+            f"recent queue wait (last {recent['count']} of window "
+            f"{recent['window']} admissions): "
+            f"p50={recent['p50_s'] * 1e3:.0f}ms "
+            f"p95={recent['p95_s'] * 1e3:.0f}ms "
+            f"({recent['p50_sweeps']:.0f}/{recent['p95_sweeps']:.0f} sweeps)"
         )
     if len(results) != len(jobs):
         raise RuntimeError(f"served {len(results)} of {len(jobs)} jobs")

@@ -29,5 +29,22 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     return Mesh(devs, ("data", "model"))
 
 
+def make_slot_mesh(data: int | None = None) -> Mesh:
+    """1-D ``("data",)`` mesh for slot-parallel serving (`SweepEngine`'s
+    ``mesh=``): replica slots shard over this axis, one slot pool per
+    device.  ``data=None`` takes every visible device — on CPU that is
+    whatever ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    forced, the trick that makes the sharded path CI-testable without a
+    TPU."""
+    devs = jax.devices()
+    if data is None:
+        data = len(devs)
+    if data > len(devs):
+        raise ValueError(
+            f"make_slot_mesh: {data} devices requested, {len(devs)} visible"
+        )
+    return Mesh(np.asarray(devs[:data]), ("data",))
+
+
 def mesh_devices_required(multi_pod: bool) -> int:
     return 512 if multi_pod else 256

@@ -329,9 +329,30 @@ class PTJob(_ScheduledJob):
 
     def on_segment(self, server, carry, slots):
         eng = server.engine
-        state = self._gather_state(eng, carry, slots)
         parity = (self._seg - 1) % 2  # round index just completed, as the
         # standalone driver's ``r % 2``
+        if eng.mesh is not None:
+            # Cross-device path: a ladder spanning devices must NOT gather
+            # its slots' spins (that is the whole carry).  Each device
+            # evaluates its own slots' energies (`slot_energies`, zero
+            # spin movement); only the job's R energy/beta scalars cross
+            # devices, and the swap decision is the same `_swap_decide`
+            # body as `swap_phase` — bit-identical to the resident path.
+            idx = np.asarray(slots, np.int64)
+            energies = eng.slot_energies(carry)[idx]
+            betas, self.swap_rng, self.swap_accept, self.swap_propose = (
+                tempering.swap_phase_from_energies(
+                    carry.betas[idx],
+                    energies,
+                    self.swap_rng,
+                    self.swap_accept,
+                    self.swap_propose,
+                    jnp.asarray(parity, jnp.int32),
+                    eng.exp_flavor,
+                )
+            )
+            return eng.set_slot_betas(carry, slots, betas)
+        state = self._gather_state(eng, carry, slots)
         state = tempering.swap_phase(
             state,
             *self._swap_energy_tables(eng),

@@ -60,6 +60,15 @@ The determinism contract extends unchanged: slot tables are as private
 as the carry rows, so solo == packed still holds bit for bit, and a
 model-less job on a multi-tenant server is bit-identical to the same job
 on a single-model server (DESIGN.md §Multi-tenancy).
+
+``mesh=...`` (a 1-D ``("data",)`` mesh, `launch.mesh.make_slot_mesh`)
+shards the slot pool over D devices: ``slots`` stays the GLOBAL count,
+every chunk advances all slots as one `shard_map` launch with zero
+cross-device traffic, and the scheduler/policies are unchanged — slot
+indices are global, GSPMD resolves (device, local slot).  PT swap phases
+take the cross-device path (per-device energies, O(R) scalars gathered).
+Bit-exactness extends across the mesh: D devices == 1 device for every
+job (DESIGN.md §Mesh, tests/test_sharded.py).
 """
 
 from __future__ import annotations
@@ -108,6 +117,11 @@ class AdmissionPolicy:
     """
 
     name = "fifo"
+
+    #: The server's sweep clock, refreshed before every `plan` call —
+    #: policies that age waiting jobs (`PriorityBackfillPolicy`) read it;
+    #: FIFO ignores it.
+    clock = 0
 
     def __init__(self):
         self._queued: list = []
@@ -173,6 +187,16 @@ class PriorityBackfillPolicy(AdmissionPolicy):
     reserved job (width W) starts at ``start = min r`` with
     ``free + sum(k_i : r_i <= r) >= W``, and
     ``spare = free + freed(start) - W``.
+
+    PRIORITY AGING (``aging_sweeps > 0``): a queued job's EFFECTIVE
+    priority for candidate ordering is ``priority + waited // aging_sweeps``
+    with ``waited`` in sweeps since submission — so under sustained
+    higher-tier traffic a priority-p job reaches tier p+k after at most
+    ``k * aging_sweeps`` sweeps of waiting, which bounds cross-tier
+    starvation (tests/test_scheduling.py).  Aging escalates ORDERING and
+    reservation rights only; preemption keeps STATIC priorities (an aged
+    priority-0 job may be admitted ahead of priority-1 arrivals, but never
+    earns the right to evict genuinely higher-priority work).
     """
 
     def __init__(
@@ -182,12 +206,16 @@ class PriorityBackfillPolicy(AdmissionPolicy):
         preempt: bool = True,
         fair: bool = False,
         user_weights: dict[str, float] | None = None,
+        aging_sweeps: int = 0,
     ):
         super().__init__()
         self.backfill = bool(backfill)
         self.preempt = bool(preempt)
         self.fair = bool(fair)
         self.user_weights = dict(user_weights or {})
+        if aging_sweeps < 0:
+            raise ValueError(f"aging_sweeps must be >= 0, got {aging_sweeps}")
+        self.aging_sweeps = int(aging_sweeps)
         self.name = "fair" if self.fair else "backfill"
         self._served: dict[str, float] = {}  # user -> served cost / weight
 
@@ -219,14 +247,24 @@ class PriorityBackfillPolicy(AdmissionPolicy):
                 }
         super().enqueue(job)
 
+    def _eff_priority(self, job) -> int:
+        """Ordering priority: static class plus one tier per
+        ``aging_sweeps`` sweeps waited since submission."""
+        if not self.aging_sweeps:
+            return job.priority
+        waited = max(0, self.clock - (job._submit_sweep or 0))
+        return job.priority + waited // self.aging_sweeps
+
     def _order(self) -> list:
         """Queued jobs in admission-candidate order."""
         if not self.fair:
-            return sorted(self._queued, key=lambda j: (-j.priority, j._seq))
+            return sorted(
+                self._queued, key=lambda j: (-self._eff_priority(j), j._seq)
+            )
         out = []
         tiers: dict[int, list] = defaultdict(list)
         for j in self._queued:
-            tiers[j.priority].append(j)
+            tiers[self._eff_priority(j)].append(j)
         for prio in sorted(tiers, reverse=True):
             queues: dict[str, deque] = defaultdict(deque)
             for j in sorted(tiers[prio], key=lambda j: j._seq):
@@ -357,18 +395,27 @@ class PriorityBackfillPolicy(AdmissionPolicy):
         return preempt, admit
 
 
-def make_policy(policy, user_weights=None) -> AdmissionPolicy:
+def make_policy(policy, user_weights=None, aging_sweeps=0) -> AdmissionPolicy:
     """``"fifo"`` | ``"backfill"`` | ``"fair"`` | an `AdmissionPolicy`."""
     if isinstance(policy, AdmissionPolicy):
         return policy
     if policy == "fifo":
         if user_weights:
             raise ValueError("user_weights only apply to policy='fair'")
+        if aging_sweeps:
+            raise ValueError(
+                "aging_sweeps applies to the priority policies "
+                "('backfill'/'fair'); FIFO has no priorities to age"
+            )
         return AdmissionPolicy()
     if policy == "backfill":
-        return PriorityBackfillPolicy(fair=False, user_weights=user_weights)
+        return PriorityBackfillPolicy(
+            fair=False, user_weights=user_weights, aging_sweeps=aging_sweeps
+        )
     if policy == "fair":
-        return PriorityBackfillPolicy(fair=True, user_weights=user_weights)
+        return PriorityBackfillPolicy(
+            fair=True, user_weights=user_weights, aging_sweeps=aging_sweeps
+        )
     raise ValueError(
         f"unknown policy {policy!r}; choose 'fifo', 'backfill', 'fair' or "
         "pass an AdmissionPolicy instance"
@@ -460,7 +507,7 @@ class SampleServer:
         *,
         slots: int = 8,
         chunk_sweeps: int | str = 8,
-        rung: str = "a4",
+        rung: str = "cb",
         backend: str = "jnp",
         V: int = 4,
         exp_flavor: str | None = None,
@@ -469,8 +516,11 @@ class SampleServer:
         idle_seed: int = 0,
         chunker: AdaptiveChunker | None = None,
         multi_tenant: bool = False,
-        policy="fifo",
+        policy="fair",
         user_weights: dict[str, float] | None = None,
+        aging_sweeps: int = 0,
+        wait_window: int = 256,
+        mesh=None,
     ):
         if chunk_sweeps == "adaptive":
             self._chunker = chunker or AdaptiveChunker()
@@ -498,6 +548,7 @@ class SampleServer:
                 exp_flavor=exp_flavor,
                 interpret=interpret,
                 replica_tile=replica_tile,
+                mesh=mesh,
             )
         else:
             self.engine = SweepEngine.build(
@@ -509,12 +560,13 @@ class SampleServer:
                 exp_flavor=exp_flavor,
                 interpret=interpret,
                 replica_tile=replica_tile,
+                mesh=mesh,
             )
         # Idle slots hold (and keep sweeping) this placeholder state until
         # a job is spliced over it.
         self.carry = self.engine.init_carry(seed=idle_seed)
         self.chunk_sweeps = None if self._chunker else int(chunk_sweeps)
-        self.policy = make_policy(policy, user_weights)
+        self.policy = make_policy(policy, user_weights, aging_sweeps)
         self._active: dict[int, tuple] = {}  # jid -> (job, slots tuple)
         self._free: list[int] = list(range(slots))
         self._next_jid = 0
@@ -530,6 +582,13 @@ class SampleServer:
         # at FIRST admission; bounded so a resident server never grows it
         # without limit.
         self._wait_records: deque = deque(maxlen=100_000)
+        # Rolling window over the last ``wait_window`` admissions — the
+        # recency-weighted SLO signal (`stats()["queue_wait_recent"]`) a
+        # resident server alerts on, robust against the since-start
+        # aggregates flattening out over a long uptime.
+        if wait_window < 1:
+            raise ValueError(f"wait_window must be >= 1, got {wait_window}")
+        self._wait_recent: deque = deque(maxlen=int(wait_window))
 
     # -- submission -----------------------------------------------------------
 
@@ -580,6 +639,9 @@ class SampleServer:
         completed, so WHEN a slot is filled never changes what it
         computes).
         """
+        # Refresh the policy's sweep clock first: priority aging reads it
+        # to compute how long each queued job has waited.
+        self.policy.clock = self.sweeps_elapsed
         preempts, admits = self.policy.plan(
             len(self._free), [j for j, _ in self._active.values()]
         )
@@ -632,14 +694,10 @@ class SampleServer:
         if job._admit_time is None:
             job._admit_time = time.perf_counter()
             job._admit_sweep = self.sweeps_elapsed
-            self._wait_records.append(
-                (
-                    job.user,
-                    job.priority,
-                    job._admit_time - job._submit_time,
-                    self.sweeps_elapsed - job._submit_sweep,
-                )
-            )
+            wait_s = job._admit_time - job._submit_time
+            wait_sweeps = self.sweeps_elapsed - job._submit_sweep
+            self._wait_records.append((job.user, job.priority, wait_s, wait_sweeps))
+            self._wait_recent.append((wait_s, wait_sweeps))
         self._active[job.jid] = (job, taken)
 
     def step(self) -> List[JobResult]:
@@ -700,6 +758,20 @@ class SampleServer:
             "max_s": float(arr[-1]),
         }
 
+    def _wait_recent_summary(self) -> dict:
+        out = {"window": self._wait_recent.maxlen, "count": len(self._wait_recent)}
+        if not self._wait_recent:
+            return out
+        secs = np.asarray([w for w, _ in self._wait_recent], np.float64)
+        sweeps = np.asarray([s for _, s in self._wait_recent], np.float64)
+        out.update(
+            p50_s=float(np.percentile(secs, 50)),
+            p95_s=float(np.percentile(secs, 95)),
+            p50_sweeps=float(np.percentile(sweeps, 50)),
+            p95_sweeps=float(np.percentile(sweeps, 95)),
+        )
+        return out
+
     def stats(self) -> dict:
         n = self.engine.model.num_spins
         # Utilization split: useful sweeps advanced a resident job; idle
@@ -745,4 +817,9 @@ class SampleServer:
                     p: self._wait_summary(w) for p, w in by_priority.items()
                 },
             },
+            # Rolling window over the last `wait_window` admissions: the
+            # recency signal (p50/p95 in wall seconds AND sweeps) that a
+            # long-lived server's alerting reads — since-start aggregates
+            # dilute a fresh latency regression to invisibility.
+            "queue_wait_recent": self._wait_recent_summary(),
         }

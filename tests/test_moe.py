@@ -58,11 +58,6 @@ def test_shared_expert_branch():
     assert y.shape == x.shape and np.isfinite(np.asarray(y)).all()
 
 
-@pytest.mark.skipif(
-    not hasattr(jax, "shard_map"),
-    reason="jax.shard_map API not in this jax (needs >= 0.5; 0.4.x has only "
-    "jax.experimental.shard_map with a different signature)",
-)
 def test_ep_shard_map_equals_local_on_trivial_mesh():
     """The expert-parallel shard_map path on a 1x1 mesh must equal the
     no-mesh local path bit-for-bit (same dispatch code)."""
@@ -91,11 +86,6 @@ def test_load_balance_loss_prefers_uniform():
     assert float(aux_u) < float(aux_c)
 
 
-@pytest.mark.skipif(
-    not hasattr(jax, "shard_map"),
-    reason="jax.shard_map API not in this jax (needs >= 0.5; 0.4.x has only "
-    "jax.experimental.shard_map with a different signature)",
-)
 def test_gather_combine_equals_psum_combine():
     """combine='gather' (all-gather compact outputs) must equal
     combine='psum' numerically on a trivial mesh."""

@@ -64,9 +64,9 @@ def test_priority_admits_higher_class_first():
 
 
 def test_fifo_policy_ignores_priority():
-    """The default policy is the historical FIFO queue: submission order,
-    no reordering, no preemption."""
-    srv = _server(slots=1, chunk_sweeps=2)  # policy="fifo" default
+    """The historical FIFO queue (now opt-in; the server default is
+    "fair"): submission order, no reordering, no preemption."""
+    srv = _server(slots=1, chunk_sweeps=2, policy="fifo")
     assert srv.stats()["policy"] == "fifo"
     lo = AnnealJob.constant(seed=1, sweeps=2, beta=1.0, priority=0)
     hi = AnnealJob.constant(seed=2, sweeps=2, beta=1.0, priority=9)
@@ -208,6 +208,64 @@ def test_every_job_eventually_runs_under_fair_policy():
 
 
 # -----------------------------------------------------------------------------
+# Priority aging: cross-tier starvation is sweep-bounded.
+# -----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["backfill", "fair"])
+def test_priority_aging_bounds_cross_tier_starvation(policy):
+    """Under SUSTAINED fresh priority-1 traffic (arrivals outpace the
+    single slot's service rate), strict tiers starve a priority-0 job
+    indefinitely — every fresh arrival outranks it.  With
+    ``aging_sweeps=K`` the waiting job's effective priority climbs one
+    tier per K sweeps, after which it outranks each fresh tier-1 arrival
+    (which has waited 0; ties break to the older seq) — so its admission
+    is bounded by ~2K sweeps regardless of the arrival rate, and the
+    bound is deterministic (pure sweep-clock arithmetic)."""
+
+    def run(aging):
+        srv = _server(slots=1, chunk_sweeps=2, policy=policy,
+                      aging_sweeps=aging)
+        srv.submit(AnnealJob.constant(seed=9, sweeps=4, beta=1.0, priority=1))
+        srv.step()  # tier-1 work is already running at submission time
+        starved = AnnealJob.constant(seed=50, sweeps=4, beta=1.0, priority=0)
+        srv.submit(starved)
+        # One fresh tier-1 arrival per chunk for 40 sweeps — twice the
+        # service rate, so the high-priority queue never empties.
+        i = 0
+        while srv.sweeps_elapsed < 40:
+            srv.submit(AnnealJob.constant(seed=10 + i, sweeps=4, beta=1.0,
+                                          priority=1))
+            i += 1
+            srv.step()
+        srv.drain()
+        return srv, starved
+
+    srv0, no_aging = run(0)
+    srv8, aged = run(8)
+    # Without aging the priority-0 job outlives the whole 40-sweep
+    # pressure window plus the accumulated backlog; with aging it lands
+    # within two aging periods of its submission (at sweep 2).
+    assert no_aging._admit_sweep > 40
+    assert aged._admit_sweep <= 2 + 2 * 8
+    assert aged._admit_sweep < no_aging._admit_sweep
+    # Aging promotes ORDERING only: the aged job's static priority stays
+    # 0, so its admission never evicts tier-1 work.  Later static-1
+    # arrivals MAY checkpoint-preempt the aged job once it runs (that is
+    # preemption working as specified, and it is bit-exact) — so every
+    # preemption on this server must be OF the aged job, none BY it.
+    assert srv8.stats()["preemptions"] == aged.preemptions
+
+
+def test_aging_validation():
+    with pytest.raises(ValueError, match="aging"):
+        make_policy("fifo", aging_sweeps=8)
+    with pytest.raises(ValueError, match="aging"):
+        PriorityBackfillPolicy(aging_sweeps=-1)
+    assert make_policy("fair", aging_sweeps=8).aging_sweeps == 8
+
+
+# -----------------------------------------------------------------------------
 # Checkpoint-preemption: park/resume is bit-exact everywhere.
 # -----------------------------------------------------------------------------
 
@@ -231,7 +289,7 @@ def test_preempted_job_bit_equals_uninterrupted_solo(backend, rung, multi_tenant
     variant = ising.reseed_couplings(m, seed=9) if multi_tenant else None
     kw = dict(kw, slots=3, chunk_sweeps=2, multi_tenant=multi_tenant)
 
-    solo = SampleServer(m, **kw)  # fifo, never preempts
+    solo = SampleServer(m, **kw)  # uncontended: nothing to preempt it
     solo.submit(AnnealJob.constant(seed=7, sweeps=10, beta=1.1, model=variant))
     (r_solo,) = solo.drain()
 
@@ -377,6 +435,32 @@ def test_stats_utilization_split_and_queue_waits():
     for agg in (qw["overall"], qw["by_user"]["a"], qw["by_priority"][2]):
         if agg["count"]:
             assert 0.0 <= agg["p50_s"] <= agg["p95_s"] <= agg["max_s"]
+
+
+def test_stats_windowed_queue_wait_tracks_recent_admissions():
+    """`queue_wait_recent` is a rolling window over the LAST `wait_window`
+    first-admissions — a long-lived server reports current latency, not
+    its lifetime aggregate.  With slots=1 the waits grow with queue
+    depth, so the window's percentiles must match the tail jobs exactly
+    (sweep-clock waits are deterministic)."""
+    srv = _server(slots=1, chunk_sweeps=2, policy="fifo", wait_window=4)
+    jobs = [AnnealJob.constant(seed=i, sweeps=4, beta=1.0) for i in range(6)]
+    for j in jobs:
+        srv.submit(j)
+    srv.drain()
+    recent = srv.stats()["queue_wait_recent"]
+    assert recent["window"] == 4 and recent["count"] == 4
+    # The window holds the last 4 of 6 admissions; earlier (shorter)
+    # waits must have been evicted from the ring buffer.
+    tail = sorted(j._admit_sweep - j._submit_sweep for j in jobs)[-4:]
+    assert recent["p50_sweeps"] == float(np.percentile(tail, 50))
+    assert recent["p95_sweeps"] == float(np.percentile(tail, 95))
+    assert recent["p50_sweeps"] > float(
+        np.percentile([j._admit_sweep - j._submit_sweep for j in jobs], 50)
+    )
+    assert 0.0 <= recent["p50_s"] <= recent["p95_s"]
+    with pytest.raises(ValueError, match="wait_window"):
+        _server(slots=1, wait_window=0)
 
 
 def test_preempted_job_not_double_charged_by_fairness():

@@ -1,0 +1,220 @@
+"""Mesh-sharded SweepEngine/SampleServer: D devices == 1 device, bit for bit.
+
+The contract (DESIGN.md §Mesh): sharding the slot pool over a ("data",)
+mesh is a LAYOUT change, not a numerical one.  Every slot owns its carry
+row and its private MT19937 lane columns, both sharded as contiguous
+[D, B/D] blocks, and the per-device sweep body is the unmodified
+single-device kernel — so a sharded engine at D devices must reproduce
+the single-device engine with the same global batch exactly, across
+admit/retire/park/resume schedules, in single- and multi-tenant mode,
+including PT ladders whose replicas span devices.
+
+Runs only with >= 4 visible devices: the CI leg forces them with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (no TPU needed).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ising
+from repro.core.engine import SweepEngine
+from repro.launch.mesh import make_slot_mesh
+from repro.serve_mc import AnnealJob, PTJob, SampleServer
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="sharded parity needs >= 4 devices "
+    "(run with XLA_FLAGS=--xla_force_host_platform_device_count=4)",
+)
+
+MODEL = ising.random_layered_model(n=5, L=8, seed=1, beta=1.0)
+
+
+def _assert_carry_equal(a, b, what=""):
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{what}: carry field {f!r} differs",
+        )
+
+
+# -----------------------------------------------------------------------------
+# Engine-level parity: run / slot APIs / energies.
+# -----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rung", ["a4", "cb"])
+def test_sharded_run_bit_equals_single_device_jnp(rung):
+    mesh = make_slot_mesh(4)
+    ref = SweepEngine.build(MODEL, rung=rung, backend="jnp", batch=8, V=4)
+    sh = SweepEngine.build(MODEL, rung=rung, backend="jnp", batch=8, V=4,
+                           mesh=mesh)
+    r0 = ref.run(ref.init_carry(seed=5), 6)
+    r1 = sh.run(sh.init_carry(seed=5), 6)
+    _assert_carry_equal(r0, r1, f"jnp/{rung}")
+    # The hot-path outputs stay sharded over the mesh (no silent gather).
+    assert "data" in r1.spins.sharding.spec
+    np.testing.assert_array_equal(
+        np.asarray(ref.slot_energies(r0)), np.asarray(sh.slot_energies(r1))
+    )
+
+
+@pytest.mark.parametrize("rung", ["a4", "cb"])
+def test_sharded_run_bit_equals_single_device_pallas(rung):
+    from repro.kernels import ops
+
+    m = ising.random_layered_model(n=4, L=2 * ops.LANES, seed=3, beta=0.9)
+    mesh = make_slot_mesh(4)
+    ref = SweepEngine.build(m, rung=rung, backend="pallas", batch=4, V=ops.LANES)
+    sh = SweepEngine.build(m, rung=rung, backend="pallas", batch=4, V=ops.LANES,
+                           mesh=mesh)
+    r0 = ref.run(ref.init_carry(seed=2), 3)
+    r1 = sh.run(sh.init_carry(seed=2), 3)
+    _assert_carry_equal(r0, r1, f"pallas/{rung}")
+
+
+def test_sharded_slot_apis_round_trip_across_device_boundary():
+    """splice/extract/park/resume/set_slot_betas with GLOBAL slot indices
+    that live on different devices (slots 0, 5, 7 at D=4, B=8 are devices
+    0, 2, 3)."""
+    mesh = make_slot_mesh(4)
+    sh = SweepEngine.build(MODEL, rung="a4", backend="jnp", batch=8, V=4,
+                           mesh=mesh)
+    carry = sh.run(sh.init_carry(seed=1), 4)
+    slot = sh.init_slot_carry(seed=77)
+    for b in (0, 5, 7):
+        spliced = sh.splice_slot(carry, b, slot)
+        _assert_carry_equal(sh.extract_slot(spliced, b), slot, f"slot {b}")
+        assert "data" in spliced.spins.sharding.spec
+    parked = sh.park_slot(carry, 6)  # device 3
+    resumed = sh.resume_slot(carry, 1, parked)  # ... back onto device 0
+    _assert_carry_equal(sh.extract_slot(resumed, 1), parked.carry, "resume")
+    withb = sh.set_slot_betas(carry, [2, 7], [0.25, 0.75])
+    got = np.asarray(withb.betas)
+    assert got[2] == np.float32(0.25) and got[7] == np.float32(0.75)
+    assert "data" in withb.betas.sharding.spec
+
+
+def test_sharded_multi_tenant_bit_equals_single_device():
+    base = MODEL
+    models = [base] + [ising.reseed_couplings(base, s) for s in range(7)]
+    mesh = make_slot_mesh(4)
+    for rung in ("a4", "cb"):
+        ref = SweepEngine.build_multi(models, rung=rung, backend="jnp", V=4)
+        sh = SweepEngine.build_multi(models, rung=rung, backend="jnp", V=4,
+                                     mesh=mesh)
+        r0 = ref.run(ref.init_carry(seed=2), 4)
+        r1 = sh.run(sh.init_carry(seed=2), 4)
+        _assert_carry_equal(r0, r1, f"multi/{rung}")
+        np.testing.assert_array_equal(
+            np.asarray(ref.slot_energies(r0)), np.asarray(sh.slot_energies(r1))
+        )
+        # Admitting a new tenant re-splices a table row on one device only;
+        # the engines must keep agreeing afterwards.
+        nm = ising.reseed_couplings(base, 99)
+        ref.set_slot_model(5, nm)
+        sh.set_slot_model(5, nm)
+        _assert_carry_equal(ref.run(r0, 2), sh.run(r1, 2), f"multi/{rung}+admit")
+
+
+def test_mesh_validation():
+    mesh = make_slot_mesh(4)
+    with pytest.raises(ValueError, match="divide evenly"):
+        SweepEngine.build(MODEL, rung="a4", backend="jnp", batch=6, V=4,
+                          mesh=mesh)
+    from jax.sharding import Mesh
+
+    bad = Mesh(np.asarray(jax.devices()[:4]), ("model",))
+    with pytest.raises(ValueError, match='"data" axis'):
+        SweepEngine.build(MODEL, rung="a4", backend="jnp", batch=8, V=4,
+                          mesh=bad)
+
+
+# -----------------------------------------------------------------------------
+# Server-level parity: full schedules over a sharded slot pool.
+# -----------------------------------------------------------------------------
+
+
+def _serve_workload(mesh, slots=8, **kw):
+    srv = SampleServer(MODEL, slots=slots, chunk_sweeps=2, rung=kw.pop("rung", "a4"),
+                       backend="jnp", V=4, mesh=mesh, **kw)
+    jobs = [AnnealJob.constant(seed=s, sweeps=b, beta=1.0)
+            for s, b in [(10, 3), (11, 7), (12, 5), (13, 4), (14, 9)]]
+    # 6 replicas at D=4, B=8 (2 slots/device): the ladder spans >= 3 devices.
+    pt = PTJob(seed=5, betas=np.linspace(0.5, 1.5, 6).astype(np.float32),
+               num_rounds=3, sweeps_per_round=2)
+    for j in jobs:
+        srv.submit(j)
+    srv.submit(pt)
+    res = {r.jid: r for r in srv.drain()}
+    return jobs, pt, res
+
+
+@pytest.mark.parametrize("rung", ["a4", "cb"])
+def test_sharded_server_bit_equals_unsharded(rung):
+    """The full serving schedule — admits into freed slots mid-flight, a
+    PT ladder spanning devices with cross-device swap phases — at D=4
+    equals the unsharded server job for job."""
+    jobs1, pt1, res1 = _serve_workload(mesh=None, rung=rung)
+    jobs4, pt4, res4 = _serve_workload(mesh=make_slot_mesh(4), rung=rung)
+    for j1, j4 in zip(jobs1 + [pt1], jobs4 + [pt4]):
+        np.testing.assert_array_equal(res1[j1.jid].spins, res4[j4.jid].spins)
+        np.testing.assert_array_equal(
+            np.asarray(res1[j1.jid].energy), np.asarray(res4[j4.jid].energy)
+        )
+    np.testing.assert_array_equal(
+        res1[pt1.jid].extras["betas"], res4[pt4.jid].extras["betas"]
+    )
+    assert (res1[pt1.jid].extras["swap_accept"]
+            == res4[pt4.jid].extras["swap_accept"])
+    assert (res1[pt1.jid].extras["swap_propose"]
+            == res4[pt4.jid].extras["swap_propose"])
+
+
+def test_sharded_preemption_park_resume_across_devices():
+    """Checkpoint-preemption on a sharded pool: a 4-wide priority job
+    evicts a running job whose slot may be resumed on a DIFFERENT device;
+    the preempted job still bit-equals its uninterrupted solo run."""
+    mesh = make_slot_mesh(4)
+    srv = SampleServer(MODEL, slots=4, chunk_sweeps=2, rung="a4", backend="jnp",
+                       V=4, mesh=mesh, policy="backfill")
+    low = AnnealJob.constant(seed=7, sweeps=10, beta=1.1)
+    srv.submit(low)
+    srv.step()
+    hi = PTJob(seed=9, betas=np.linspace(0.5, 1.5, 4).astype(np.float32),
+               num_rounds=2, sweeps_per_round=2, priority=5)
+    srv.submit(hi)
+    res = {r.jid: r for r in srv.drain()}
+    assert low.preemptions == 1
+    solo = SampleServer(MODEL, slots=1, chunk_sweeps=2, rung="a4",
+                        backend="jnp", V=4, policy="fifo")
+    solo.submit(AnnealJob.constant(seed=7, sweeps=10, beta=1.1))
+    (r_solo,) = solo.drain()
+    np.testing.assert_array_equal(r_solo.spins, res[low.jid].spins)
+    assert r_solo.energy == res[low.jid].energy
+
+
+def test_sharded_multi_tenant_server_bit_equals_unsharded():
+    """Multi-tenant sharded serving: jobs over private disorder instances
+    (table splices landing on single devices) still reproduce the
+    unsharded multi-tenant server exactly."""
+    variants = [None, ising.reseed_couplings(MODEL, 21),
+                ising.reseed_couplings(MODEL, 22)]
+
+    def run(mesh):
+        srv = SampleServer(MODEL, slots=4, chunk_sweeps=2, rung="cb",
+                           backend="jnp", V=4, multi_tenant=True, mesh=mesh)
+        jobs = [
+            AnnealJob.constant(seed=40 + i, sweeps=4 + 2 * i, beta=1.0, model=v)
+            for i, v in enumerate(variants)
+        ]
+        for j in jobs:
+            srv.submit(j)
+        return jobs, {r.jid: r for r in srv.drain()}
+
+    jobs1, res1 = run(None)
+    jobs4, res4 = run(make_slot_mesh(4))
+    for j1, j4 in zip(jobs1, jobs4):
+        np.testing.assert_array_equal(res1[j1.jid].spins, res4[j4.jid].spins)
+        assert res1[j1.jid].energy == res4[j4.jid].energy
