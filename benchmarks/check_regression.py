@@ -62,6 +62,12 @@ THRESHOLDS = (
          min_ratio=0.5),
     dict(bench="serve", record="serve_hetero_packed_B8", metric="speedup_vs_B1",
          min_ratio=0.5),
+    # Telemetry must stay (nearly) free: jobs/sec with the full event
+    # pipeline on vs off is an on-box code-path ratio near 1.0, so the
+    # gate is tight — dropping below 0.95x the recorded ratio means the
+    # observability layer started costing real throughput.
+    dict(bench="serve", record="serve_telemetry_on", metric="overhead_ratio",
+         min_ratio=0.95),
     # Scheduling: backfill/fair must keep beating FIFO.  Wall ratio is
     # machine-sensitive (0.5); the sweep-clock metrics are exact (0.95).
     dict(bench="serve", record="sched_backfill", metric="speedup_vs_fifo",

@@ -26,6 +26,10 @@ The serving claim of DESIGN.md §Service, measured three ways:
   the asserted D=4 >= 2x D=1 bar holds on any machine, including this
   single-core box where forced host devices cannot show wall speedup
   (wall ``speedup_vs_D1`` is reported and baseline-gated, not asserted).
+* telemetry overhead (cb rung): the same mix with the full observability
+  event pipeline on vs telemetry off, interleaved rounds — measures the
+  DESIGN.md §Observability <= 5% overhead claim as ``overhead_ratio``
+  (jobs/sec on / off), gated against the baseline by check_regression.
 * scheduling policies (cb rung): one ADVERSARIAL wide+narrow mixed
   workload — narrow starters, a 6-slot PT ladder near the queue head
   (head-of-line blocker), a heavy user's narrow backlog with a light
@@ -103,6 +107,15 @@ def job_specs(num_jobs: int, seed: int, chunk: int):
 
 
 REPEATS = 3  # best-of-N rounds per workload: the box this runs on is shared
+# The sched section's fair-vs-fifo WALL margin is thin (~1.5%: fair's
+# sweep-clock win is partly spent on park/resume dispatches), while
+# per-round jitter on a shared box runs ~10% — so its acceptance
+# assertions need more interleaved best-of rounds than the throughput
+# sections.  Rounds are ~0.13 s each; the extra de-noising costs ~3 s.
+SCHED_REPEATS = 8
+# The telemetry section gates a ratio of two nearly-equal walls (target
+# >= 0.95 of telemetry-off), so it needs the same extra de-noising.
+TELEMETRY_REPEATS = 8
 
 
 def run_workload(m, specs, slots: int, chunk: int, *, rung: str = "a4",
@@ -117,9 +130,13 @@ def run_workload(m, specs, slots: int, chunk: int, *, rung: str = "a4",
     determinism makes every round's results bit-identical, so repetition
     only de-noises the wall clock.
     """
+    # telemetry=False: the comparison sections measure the untimed
+    # fire-and-forget hot path (per-launch event timing would add a sync
+    # whose cost scales with launch count, skewing path-vs-path ratios);
+    # the telemetry_overhead section is where "on" is measured.
     srv = SampleServer(
         m, slots=slots, chunk_sweeps=chunk, backend="jnp", V=V, rung=rung,
-        multi_tenant=models is not None,
+        multi_tenant=models is not None, telemetry=False,
     )
     # Warmup: pay jit for run(chunk)/splice/extract outside the timed window.
     srv.submit(AnnealJob.constant(seed=1, sweeps=chunk, beta=1.0))
@@ -235,7 +252,7 @@ def _sharded_worker(d: int) -> None:
     slots = SHARDED_SLOTS_PER_DEVICE * d
     srv = SampleServer(
         m, slots=slots, chunk_sweeps=CHUNK, backend="jnp", V=V, rung="cb",
-        mesh=make_slot_mesh(d),
+        mesh=make_slot_mesh(d), telemetry=False,
     )
     # Warmup pays jit for run(chunk) + splice/extract outside the timing.
     srv.submit(AnnealJob.constant(seed=1, sweeps=CHUNK, beta=1.0))
@@ -350,6 +367,87 @@ def _sharded_section(rows, records):
         )
 
 
+def _telemetry_overhead_section(m, specs, rows, records):
+    """Telemetry-on vs telemetry-off jobs/sec on the cb serving path.
+
+    DESIGN.md §Observability promises <= 5% serving overhead with the
+    full event pipeline on — measured here, never assumed: the SAME
+    mixed workload through two resident servers, one with event
+    recording on (spans, launch complete-events, per-launch
+    block_until_ready timing), one with telemetry off (the
+    pre-observability fire-and-forget hot path).  Rounds are INTERLEAVED
+    (off, on, off, on, ...) so a slow patch on a shared box hits both
+    sides alike; each side reports its best round.  The committed
+    baseline's ``overhead_ratio`` (jobs/sec on / jobs/sec off) is gated
+    by check_regression.py; the in-bench floor of 0.90 catches a gross
+    regression even on a fresh machine with no baseline.
+    """
+
+    def make(flag: bool) -> SampleServer:
+        srv = SampleServer(m, slots=8, chunk_sweeps=CHUNK, backend="jnp",
+                           V=V, rung="cb", telemetry=flag)
+        # Warmup pays jit for run(chunk)/splice/extract outside the timing.
+        srv.submit(AnnealJob.constant(seed=1, sweeps=CHUNK, beta=1.0))
+        srv.drain()
+        return srv
+
+    servers = {"off": make(False), "on": make(True)}
+    best = {k: float("inf") for k in servers}
+    res: dict[str, list] = {}
+    # The gated overhead_ratio divides two ~0.3s walls whose honest gap
+    # is a few percent, against ~10% per-round jitter on this shared
+    # box — best-of-3 is not enough to resolve it (same reasoning as
+    # SCHED_REPEATS).
+    for _ in range(TELEMETRY_REPEATS):
+        for k, srv in servers.items():
+            jobs = [AnnealJob.constant(seed=s, sweeps=b, beta=be)
+                    for s, b, be in specs]
+            t0 = time.perf_counter()
+            for j in jobs:
+                srv.submit(j)
+            by_jid = {r.jid: r for r in srv.drain()}
+            best[k] = min(best[k], time.perf_counter() - t0)
+            res[k] = [by_jid[j.jid] for j in jobs]
+    # Observation must never change results, and events must have flowed.
+    _check_bit_identical(res["off"], res["on"], specs, "telemetry_overhead")
+    st_on = servers["on"].stats()["telemetry"]
+    assert st_on["enabled"] and st_on["events_recorded"] > 0
+    assert servers["off"].stats()["telemetry"]["events_recorded"] == 0
+    total_sweeps = sum(b for _, b, _ in specs)
+    n_spins = m.num_spins
+    ratio = best["off"] / best["on"]  # == jobs/sec on / jobs/sec off
+    if ratio < 0.90:
+        raise AssertionError(
+            f"telemetry overhead: jobs/sec with events on is {ratio:.3f}x "
+            "the telemetry-off path (in-bench floor 0.90)"
+        )
+    for k in ("off", "on"):
+        dt = best[k]
+        rec = {
+            "name": f"serve_telemetry_{k}",
+            "B": 8,
+            "rung": "cb",
+            "telemetry": k == "on",
+            "sweeps_per_sec": total_sweeps / dt,
+            "wall_clock_s": dt,
+            "jobs_per_sec": NUM_JOBS / dt,
+            "spin_flips_per_sec": total_sweeps * n_spins / dt,
+            "num_jobs": NUM_JOBS,
+            "bit_identical_to_off": True,
+        }
+        if k == "on":
+            rec["overhead_ratio"] = ratio
+            rec["events_recorded"] = st_on["events_recorded"]
+            rec["events_dropped"] = st_on["events_dropped"]
+        records.append(rec)
+        rows.append(
+            (f"serve_telemetry_{k}_jobs_per_sec", NUM_JOBS / dt * 1e6,
+             f"{NUM_JOBS / dt:.1f} jobs/s"
+             + (f", {ratio:.3f}x of telemetry-off, "
+                f"{st_on['events_recorded']} events" if k == "on" else ""))
+        )
+
+
 URGENT_AT_SWEEPS = 40  # sweep-clock arrival of the urgent wide ladder
 
 
@@ -396,7 +494,7 @@ def sched_jobs(chunk: int) -> list:
 def make_sched_server(m, policy: str, chunk: int) -> SampleServer:
     srv = SampleServer(
         m, slots=SCHED_SLOTS, chunk_sweeps=chunk, backend="jnp", V=V,
-        rung="cb", policy=policy,
+        rung="cb", policy=policy, telemetry=False,
     )
     # Warmup covers run(chunk) plus the splice/extract/park jits.
     srv.submit(AnnealJob.constant(seed=1, sweeps=chunk, beta=1.0))
@@ -459,7 +557,7 @@ def _sched_section(m, rows, records):
     servers = {p: make_sched_server(m, p, CHUNK) for p in SCHED_POLICIES}
     outs = {}
     all_waits = defaultdict(list)
-    for _ in range(REPEATS):
+    for _ in range(SCHED_REPEATS):
         for policy in SCHED_POLICIES:
             out = run_sched_round(servers[policy], CHUNK)
             all_waits[policy].append(out[2])
@@ -568,6 +666,10 @@ def run():
                for k in range(NUM_TENANT_MODELS)]
     _compare_section(m, specs, "serve_hetero", (8,), rung="cb",
                      models=tenants, rows=rows, records=records)
+
+    # Telemetry overhead: the full event pipeline on vs off, same mix
+    # (DESIGN.md §Observability's <= 5% claim, gated by check_regression).
+    _telemetry_overhead_section(m, specs, rows, records)
 
     # Scheduling policies under the adversarial wide+narrow mix: FIFO vs
     # backfill vs fair (ISSUE 5 acceptance assertions inside).  Deeper

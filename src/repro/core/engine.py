@@ -474,6 +474,45 @@ class SweepEngine:
 
         return run
 
+    def device_ready_times(self, carry: SweepCarry, t0: float) -> np.ndarray:
+        """(D,) wall seconds from ``t0`` until each device's shard of the
+        carry was ready, in mesh device order (sharded engines only).
+
+        The observability layer's straggler probe (DESIGN.md
+        §Observability): after a `run` launch, one waiter thread per
+        device blocks on that device's addressable spins shard and
+        timestamps when it became ready — so each device's completion is
+        measured independently and a straggling device shows up as the
+        one whose ready time dominates the launch, wherever it sits in
+        device order (`block_until_ready` waits in the runtime with the
+        GIL released, so the waiters don't serialize each other).  Pure
+        reads; the carry is untouched (`obs.LaunchSkewMonitor` consumes
+        the series).
+        """
+        if self.mesh is None:
+            raise ValueError("device_ready_times needs a mesh-sharded engine")
+        import threading
+        import time as _time
+
+        shards = sorted(
+            carry.spins.addressable_shards, key=lambda s: s.device.id
+        )
+        out = np.empty(len(shards), np.float64)
+
+        def _wait(i: int, data) -> None:
+            jax.block_until_ready(data)
+            out[i] = _time.perf_counter() - t0
+
+        threads = [
+            threading.Thread(target=_wait, args=(i, s.data))
+            for i, s in enumerate(shards)
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        return out
+
     def slot_energies(self, carry: SweepCarry) -> jax.Array:
         """Per-slot energies (B,) of the carry's spins, computed
         device-locally (lane rungs only).

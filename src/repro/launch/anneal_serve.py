@@ -27,6 +27,12 @@ never what it computes.
 (DESIGN.md §Mesh): slots must divide evenly and results stay bit-identical
 to ``--devices 0`` (no mesh).  On a CPU-only host, force visible devices
 first: ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+
+``--trace PATH`` writes the run's Chrome-trace-event JSON (load it in
+Perfetto / chrome://tracing: job lifecycle tracks, engine launches with
+compile-vs-steady, scheduler decisions); ``--metrics`` prints the
+Prometheus text exposition of the server's metric registry after the
+drain (DESIGN.md §Observability).  ``--smoke`` exercises both.
 """
 
 from __future__ import annotations
@@ -117,6 +123,12 @@ def main(argv=None):
     ap.add_argument("--pt-replicas", type=int, default=0)
     ap.add_argument("--pt-rounds", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome-trace-event JSON of the run "
+                         "(Perfetto / chrome://tracing loadable)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the Prometheus text exposition of the "
+                         "server's metric registry after the drain")
     args = ap.parse_args(argv)
     if args.smoke:
         # 7 anneal jobs + 1 three-replica PT job = 8 jobs on 4 slots.
@@ -125,6 +137,9 @@ def main(argv=None):
         args.budget_min, args.budget_max = 4, 24
         args.pt_replicas, args.pt_rounds = 3, 3
         args.backend = "jnp"
+        if args.trace is None:
+            args.trace = "serve_smoke_trace.json"
+        args.metrics = True
 
     model = ising.random_layered_model(
         n=args.n, L=args.L, seed=args.seed, beta=args.beta
@@ -195,6 +210,20 @@ def main(argv=None):
             f"p95={recent['p95_s'] * 1e3:.0f}ms "
             f"({recent['p50_sweeps']:.0f}/{recent['p95_sweeps']:.0f} sweeps)"
         )
+    if args.trace:
+        from repro.obs.trace import validate_events
+
+        path = server.telemetry.write_chrome_trace(args.trace)
+        trace = server.telemetry.chrome_trace()
+        validate_events(trace["traceEvents"])  # a broken trace fails the run
+        tel = st["telemetry"]
+        print(
+            f"trace: {len(trace['traceEvents'])} events -> {path} "
+            f"({tel['events_dropped']} dropped by the ring)"
+        )
+    if args.metrics:
+        print("-- metrics (Prometheus text exposition) --")
+        print(server.telemetry.prometheus_text(), end="")
     if len(results) != len(jobs):
         raise RuntimeError(f"served {len(results)} of {len(jobs)} jobs")
     return results

@@ -239,7 +239,9 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool, for_lowering=True,
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, analyze: bool = True,
              cfg_overrides=None, tc_overrides=None):
-    t0 = time.time()
+    # perf_counter, not time.time: lower/compile timings must be immune
+    # to wall-clock adjustment (NTP slew), the repo-wide timing convention.
+    t0 = time.perf_counter()
     try:
         fn, args, shardings, donate, meta, ctx = build_cell(
             arch, shape_name, multi_pod,
@@ -250,9 +252,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, analyze: bool = True,
     with use_ctx(ctx):
         jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
         lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()

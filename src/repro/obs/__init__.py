@@ -1,0 +1,35 @@
+"""Observability for the SampleServer stack (DESIGN.md §Observability).
+
+    telemetry  one metrics registry (counters/gauges/histograms, with
+               labels) + one bounded ring of Chrome-trace events; spans
+               for scheduler phases, complete events for engine launches,
+               async spans for job lifecycles.
+    trace      Chrome-trace-event JSON exporter (+ the schema validator).
+    metrics    JSON snapshot + Prometheus text exposition of the registry.
+    stream     opt-in per-chunk observable tap (energy / magnetization /
+               best-so-far per active job) — the async front-end's input.
+    skew       per-device launch-skew detection on sharded engines,
+               reusing runtime/ft.py's StragglerMonitor.
+
+Hard contract: observation never touches carries — telemetry-on runs are
+bit-identical to telemetry-off, and overhead is measured and gated
+(benchmarks/serve_bench.py telemetry_overhead), not assumed.
+"""
+
+from repro.obs.skew import LaunchSkewMonitor, SkewEvent
+from repro.obs.stream import BestState, ChunkSample, ObservableStream
+from repro.obs.telemetry import Counter, Gauge, Histogram, Telemetry
+from repro.obs.trace import validate_events
+
+__all__ = [
+    "BestState",
+    "ChunkSample",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LaunchSkewMonitor",
+    "ObservableStream",
+    "SkewEvent",
+    "Telemetry",
+    "validate_events",
+]

@@ -1,0 +1,101 @@
+"""Per-device launch-skew detection for mesh-sharded engines.
+
+On a sharded `SampleServer` every chunk is one `shard_map` launch whose
+per-device bodies are independent — so one slow device (thermal
+throttling, a noisy neighbour, a dying part) stretches EVERY launch to
+its pace while the skew stays invisible in aggregate wall time.
+`LaunchSkewMonitor` reuses the training stack's EMA anomaly detector
+(`runtime/ft.py:StragglerMonitor`, one per device) and adds the
+cross-device comparison a single-series monitor cannot make: a device is
+flagged when its launch time is anomalous against its OWN history
+(StragglerMonitor's sigma test) or persistently out of line with the
+OTHER devices this launch (relative skew vs the device median).
+
+Per-device times come from `SweepEngine` shard ready-times: after a
+launch, blocking on each device's addressable shard in device order
+timestamps when that device's output became ready (the scheduler wires
+this up when telemetry is on and the engine is sharded).  Detection is
+the monitor's whole job — mitigation (migrating that device's slots,
+cordoning the host) is an orchestration action, exactly as in ft.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.runtime.ft import StragglerMonitor
+
+
+@dataclasses.dataclass
+class SkewEvent:
+    """One flagged (launch, device) pair, with the evidence."""
+
+    launch: int
+    device: int
+    seconds: float
+    device_median: float
+
+
+class LaunchSkewMonitor:
+    """Per-device `StragglerMonitor`s + cross-device relative skew.
+
+    ``rel_threshold`` is the cross-device test: device d is skewed on a
+    launch when ``t_d > rel_threshold * median(t)`` (and the absolute gap
+    clears ``min_gap_s``, so microsecond jitter on near-instant launches
+    never trips it).  The per-device EMA test inherits StragglerMonitor's
+    semantics: warmup, sigma floor, no EMA poisoning by flagged steps.
+    """
+
+    def __init__(
+        self,
+        num_devices: int,
+        rel_threshold: float = 2.0,
+        min_gap_s: float = 1e-4,
+        alpha: float = 0.1,
+        threshold_sigma: float = 3.0,
+        warmup_steps: int = 5,
+    ):
+        if num_devices < 1:
+            raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+        if rel_threshold <= 1.0:
+            raise ValueError(
+                f"rel_threshold must be > 1, got {rel_threshold}"
+            )
+        self.num_devices = int(num_devices)
+        self.rel_threshold = float(rel_threshold)
+        self.min_gap_s = float(min_gap_s)
+        self.monitors = [
+            StragglerMonitor(
+                alpha=alpha,
+                threshold_sigma=threshold_sigma,
+                warmup_steps=warmup_steps,
+            )
+            for _ in range(self.num_devices)
+        ]
+        self.launches = 0
+        self.events: list[SkewEvent] = []
+
+    def record(self, times) -> list[int]:
+        """Feed one launch's per-device wall times; returns the flagged
+        device indices (empty when the launch looks healthy)."""
+        times = np.asarray(times, np.float64)
+        if times.shape != (self.num_devices,):
+            raise ValueError(
+                f"expected {self.num_devices} per-device times, "
+                f"got shape {times.shape}"
+            )
+        med = float(np.median(times))
+        flagged = []
+        for d, (mon, t) in enumerate(zip(self.monitors, times)):
+            t = float(t)
+            own = mon.record(self.launches, t)
+            rel = (
+                t > self.rel_threshold * med and t - med > self.min_gap_s
+            )
+            if own or rel:
+                flagged.append(d)
+                self.events.append(SkewEvent(self.launches, d, t, med))
+        self.launches += 1
+        return flagged

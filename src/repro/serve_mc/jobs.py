@@ -81,6 +81,7 @@ class _ScheduledJob:
     """
 
     num_slots = 1
+    kind = "job"  # telemetry label (job lifecycle trace events)
 
     def __init__(
         self,
@@ -154,6 +155,8 @@ class AnnealJob(_ScheduledJob):
     means the model's default.  Single-segment jobs are plain constant-
     temperature sampling; multi-segment jobs are annealing ladders.
     """
+
+    kind = "anneal"
 
     def __init__(
         self,
@@ -260,6 +263,8 @@ class PTJob(_ScheduledJob):
     ``init_spins(m, seed*1000 + b)``), so the result is bit-identical to
     `tempering.run_parallel_tempering` regardless of slot placement.
     """
+
+    kind = "pt"
 
     def __init__(
         self,

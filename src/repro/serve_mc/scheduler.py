@@ -69,6 +69,24 @@ indices are global, GSPMD resolves (device, local slot).  PT swap phases
 take the cross-device path (per-device energies, O(R) scalars gathered).
 Bit-exactness extends across the mesh: D devices == 1 device for every
 job (DESIGN.md §Mesh, tests/test_sharded.py).
+
+TELEMETRY (DESIGN.md §Observability): the server owns a
+`repro.obs.Telemetry` registry — counters/gauges/histograms that
+`stats()` READS (one source of numbers; a metrics scrape and stats() can
+never disagree) plus a bounded ring of Chrome-trace events: sync spans
+for scheduler phases, one complete event per engine launch (chunk size,
+jobs aboard, wall clock, compile-vs-steady, device count), async spans
+per job lifecycle (submit -> admit -> segments -> retire, park/resume
+with reasons), and plan events for admission decisions.  ``telemetry=
+False`` turns event recording off (counters keep counting — stats needs
+them); either way results are bit-identical, and the overhead of "on" is
+measured and gated (benchmarks/serve_bench.py telemetry_overhead), not
+assumed.  ``stream=`` attaches an `obs.ObservableStream`: an opt-in
+per-chunk energy/magnetization/best-so-far tap over the active jobs —
+the hook the ROADMAP async front-end will stream to clients.  On a
+sharded engine the launch probe also times each DEVICE's shard
+(`SweepEngine.device_ready_times`) and feeds an `obs.LaunchSkewMonitor`,
+so one straggling device is detected, not averaged away.
 """
 
 from __future__ import annotations
@@ -82,6 +100,7 @@ import numpy as np
 
 from repro.core import ising
 from repro.core.engine import SweepEngine
+from repro.obs import LaunchSkewMonitor, ObservableStream, Telemetry
 
 from repro.serve_mc.jobs import JobResult
 
@@ -521,6 +540,8 @@ class SampleServer:
         aging_sweeps: int = 0,
         wait_window: int = 256,
         mesh=None,
+        telemetry: bool | Telemetry = True,
+        stream: ObservableStream | None = None,
     ):
         if chunk_sweeps == "adaptive":
             self._chunker = chunker or AdaptiveChunker()
@@ -570,14 +591,37 @@ class SampleServer:
         self._active: dict[int, tuple] = {}  # jid -> (job, slots tuple)
         self._free: list[int] = list(range(slots))
         self._next_jid = 0
-        # Counters for throughput reporting.
-        self.launches = 0
-        self.busy_slot_sweeps = 0
-        self.total_slot_sweeps = 0
-        self.sweeps_elapsed = 0  # the global sweep clock (sum of chunks)
-        self.preemptions = 0
-        self.launch_chunks: Counter = Counter()  # chunk size -> launch count
-        # (a Counter, not a log: a resident server launches forever)
+        # The one metrics registry: stats(), the Prometheus/JSON exporters
+        # and the Chrome trace all read it, so their numbers cannot
+        # disagree.  telemetry=False only silences EVENT recording —
+        # counters keep counting because stats() is built on them.
+        self.telemetry = (
+            telemetry
+            if isinstance(telemetry, Telemetry)
+            else Telemetry(enabled=bool(telemetry))
+        )
+        self.telemetry.name_thread(0, "scheduler")
+        tel = self.telemetry
+        self._c_launches = tel.counter("serve.launches")
+        # the global sweep clock (sum of chunks), read via .sweeps_elapsed
+        self._c_sweeps = tel.counter("serve.sweeps_elapsed")
+        self._c_busy = tel.counter("serve.busy_slot_sweeps")
+        self._c_total = tel.counter("serve.total_slot_sweeps")
+        self._c_preempt = tel.counter("serve.preemptions")
+        self._c_submitted = tel.counter("serve.jobs_submitted")
+        self._c_completed = tel.counter("serve.jobs_completed")
+        self._c_straggler = tel.counter("serve.straggler_events")
+        self._h_wait = tel.histogram("serve.queue_wait_s")
+        self.stream = stream
+        # Chunk sizes already compiled (num_sweeps is a static jit arg):
+        # a launch whose size is not in here pays compilation, and its
+        # trace event says so (compile=True).
+        self._warm_chunks: set[int] = set()
+        self.devices = self.engine.mesh.shape["data"] if mesh is not None else 1
+        self._skew = (
+            LaunchSkewMonitor(self.devices) if self.devices > 1 else None
+        )
+        self._profiler: dict | None = None
         # Queue-wait samples (user, priority, wait_s, wait_sweeps), taken
         # at FIRST admission; bounded so a resident server never grows it
         # without limit.
@@ -604,6 +648,43 @@ class SampleServer:
     def num_queued(self) -> int:
         return len(self.policy)
 
+    # Throughput counters live in the telemetry registry (the one source
+    # stats() and the exporters share); these properties keep the
+    # original attribute API for tests, benches and examples.
+
+    @property
+    def launches(self) -> int:
+        return self._c_launches.value
+
+    @property
+    def busy_slot_sweeps(self) -> int:
+        return self._c_busy.value
+
+    @property
+    def total_slot_sweeps(self) -> int:
+        return self._c_total.value
+
+    @property
+    def sweeps_elapsed(self) -> int:
+        return self._c_sweeps.value
+
+    @property
+    def preemptions(self) -> int:
+        return self._c_preempt.value
+
+    @property
+    def launch_chunks(self) -> Counter:
+        """chunk size -> launch count, rebuilt from the labeled counter
+        series (a Counter, not a log: a resident server launches forever)."""
+        return Counter(
+            {
+                int(labels["chunk"]): int(value)
+                for labels, value in self.telemetry.series(
+                    "serve.launches_by_chunk"
+                )
+            }
+        )
+
     def submit(self, job) -> int:
         """Enqueue a job; returns its assigned job id."""
         if job.num_slots > self.slots:
@@ -625,6 +706,16 @@ class SampleServer:
         job._submit_sweep = self.sweeps_elapsed
         job._admit_time = None
         self.policy.enqueue(job)
+        self._c_submitted.add(1)
+        self.telemetry.async_begin(
+            "job",
+            job.jid,
+            kind=job.kind,
+            slots=job.num_slots,
+            priority=job.priority,
+            user=job.user,
+            submit_sweep=job._submit_sweep,
+        )
         return job.jid
 
     # -- scheduling -----------------------------------------------------------
@@ -642,9 +733,19 @@ class SampleServer:
         # Refresh the policy's sweep clock first: priority aging reads it
         # to compute how long each queued job has waited.
         self.policy.clock = self.sweeps_elapsed
+        free_before = len(self._free)
         preempts, admits = self.policy.plan(
-            len(self._free), [j for j, _ in self._active.values()]
+            free_before, [j for j, _ in self._active.values()]
         )
+        if preempts or admits:
+            self.telemetry.instant(
+                "sched.plan",
+                policy=self.policy.name,
+                free=free_before,
+                queued=len(self.policy),
+                admitted=[j.jid for j in admits],
+                preempted=[j.jid for j in preempts],
+            )
         for job in preempts:
             self._park(job)
         for job in admits:
@@ -658,8 +759,15 @@ class SampleServer:
         _, taken = self._active.pop(job.jid)
         job.parked = [self.engine.park_slot(self.carry, b) for b in taken]
         job.preemptions += 1
-        self.preemptions += 1
+        self._c_preempt.add(1)
         self._free.extend(taken)
+        self.telemetry.async_instant(
+            "job",
+            job.jid,
+            phase="park",
+            reason="preempt",
+            sweeps_done=job.sweeps_done,
+        )
 
     def _place(self, job) -> None:
         """Splice a job into free slots: fresh init on first admission,
@@ -698,40 +806,189 @@ class SampleServer:
             wait_sweeps = self.sweeps_elapsed - job._submit_sweep
             self._wait_records.append((job.user, job.priority, wait_s, wait_sweeps))
             self._wait_recent.append((wait_s, wait_sweeps))
+            self._h_wait.observe(wait_s)
+            self.telemetry.async_instant(
+                "job",
+                job.jid,
+                phase="admit",
+                slots=list(taken),
+                wait_s=wait_s,
+                wait_sweeps=wait_sweeps,
+            )
+        else:
+            self.telemetry.async_instant(
+                "job",
+                job.jid,
+                phase="resume",
+                slots=list(taken),
+                sweeps_done=job.sweeps_done,
+            )
         self._active[job.jid] = (job, taken)
+
+    def arm_profiler(self, logdir: str, num_chunks: int = 4) -> None:
+        """Arm a `jax.profiler` trace window around the next
+        ``num_chunks`` engine launches: the device-level profile (HLO
+        ops, fusion, memory — TensorBoard/Perfetto-loadable under
+        ``logdir``) that the host-side Chrome trace cannot see.  The
+        window opens right before the next launch and closes after the
+        Nth; start/stop failures are reported as trace events, never
+        raised — profiling must not kill a resident server."""
+        if num_chunks < 1:
+            raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
+        self._profiler = {
+            "logdir": str(logdir),
+            "remaining": int(num_chunks),
+            "active": False,
+        }
+
+    def _launch(self, chunk: int) -> None:
+        """Dispatch one fused engine launch; return the pending probe.
+
+        Timing forces completion (`block_until_ready`) — under JAX's
+        async dispatch, timing the dispatch alone measures nothing.  But
+        blocking *immediately* after dispatch would also serialize the
+        device against the step's Python bookkeeping, which the
+        fire-and-forget path overlaps for free.  So the launch is split:
+        this method dispatches and returns `(t0, compiled)` when timing
+        is wanted, and `_settle_launch` blocks/records later — after
+        `step()` has done its pure-Python work in the shadow of the
+        device compute.  With a fixed chunk and event recording off,
+        the launch stays fire-and-forget (`None` pending): the
+        telemetry-off path IS the pre-observability hot path (the
+        overhead bench compares the two).
+        """
+        tel = self.telemetry
+        if self._profiler is not None and not self._profiler["active"]:
+            try:
+                jax.profiler.start_trace(self._profiler["logdir"])
+                self._profiler["active"] = True
+                tel.instant("profiler.start", logdir=self._profiler["logdir"])
+            except Exception as e:  # pragma: no cover - environment-dependent
+                tel.instant("profiler.error", error=str(e))
+                self._profiler = None
+        timed = self._chunker is not None or tel.enabled
+        pending = None
+        if not timed:
+            self.carry = self.engine.run(self.carry, chunk)
+        else:
+            compiled = chunk in self._warm_chunks
+            t0 = time.perf_counter()
+            self.carry = self.engine.run(self.carry, chunk)
+            pending = (t0, compiled)
+        self._warm_chunks.add(chunk)
+        self._c_launches.add(1)
+        tel.counter("serve.launches_by_chunk", chunk=chunk).add(1)
+        self._c_sweeps.add(chunk)
+        return pending
+
+    def _settle_launch(self, chunk: int, pending) -> None:
+        """Force the dispatched launch to completion and record timing.
+
+        `dt` spans dispatch start -> device ready.  If the device
+        finished while `step()` was still doing Python bookkeeping, the
+        block returns immediately and `dt` absorbs (at most) that
+        bookkeeping time — a sub-millisecond ceiling that buys back the
+        dispatch/compute overlap, which is worth far more than the bias.
+        On a sharded engine the probe times each device's shard instead
+        (`device_ready_times`) and feeds the skew monitor, so one
+        straggling device is flagged, not averaged into the wall time.
+        """
+        tel = self.telemetry
+        if pending is not None:
+            t0, compiled = pending
+            if self._skew is not None and tel.enabled:
+                times = self.engine.device_ready_times(self.carry, t0)
+                dt = float(times.max())
+                flagged = self._skew.record(times)
+                if flagged:
+                    self._c_straggler.add(len(flagged))
+                    tel.instant(
+                        "engine.straggler",
+                        cat="engine",
+                        devices=flagged,
+                        times_s=[float(t) for t in times],
+                    )
+            else:
+                jax.block_until_ready(self.carry)
+                dt = time.perf_counter() - t0
+            if self._chunker is not None:
+                self._chunker.observe(chunk, dt)
+            phase = "steady" if compiled else "compile"
+            tel.histogram("serve.launch_s", phase=phase).observe(dt)
+            tel.complete(
+                "engine.launch",
+                dur_us=dt * 1e6,
+                cat="engine",
+                chunk=chunk,
+                jobs=len(self._active),
+                devices=self.devices,
+                compile=not compiled,
+            )
+        if self._profiler is not None and self._profiler["active"]:
+            self._profiler["remaining"] -= 1
+            if self._profiler["remaining"] <= 0:
+                try:
+                    jax.profiler.stop_trace()
+                    tel.instant("profiler.stop")
+                except Exception as e:  # pragma: no cover
+                    tel.instant("profiler.error", error=str(e))
+                self._profiler = None
 
     def step(self) -> List[JobResult]:
         """One scheduling round: admit, one chunked launch, hooks, retire.
 
         Returns the jobs that retired this round (possibly empty).
         """
-        self._admit()
-        if not self._active:
-            return []
-        bound = min(j.remaining_in_segment() for j, _ in self._active.values())
-        if self._chunker is not None:
-            chunk = self._chunker.propose(len(self.policy), bound)
-            t0 = time.perf_counter()
-            self.carry = jax.block_until_ready(self.engine.run(self.carry, chunk))
-            self._chunker.observe(chunk, time.perf_counter() - t0)
-        else:
-            chunk = min(self.chunk_sweeps, bound)
-            self.carry = self.engine.run(self.carry, chunk)
-        self.launch_chunks[chunk] += 1
-        self.launches += 1
-        self.sweeps_elapsed += chunk
-        busy = sum(j.num_slots for j, _ in self._active.values())
-        self.busy_slot_sweeps += chunk * busy
-        self.total_slot_sweeps += chunk * self.slots
-        completed: List[JobResult] = []
-        for jid in list(self._active):
-            job, taken = self._active[jid]
-            if job.advance(chunk):
+        tel = self.telemetry
+        with tel.span("sched.step"):
+            with tel.span("sched.admit"):
+                self._admit()
+            tel.gauge("serve.active_jobs").set(len(self._active))
+            tel.gauge("serve.queued_jobs").set(len(self.policy))
+            tel.gauge("serve.free_slots").set(len(self._free))
+            if not self._active:
+                return []
+            bound = min(
+                j.remaining_in_segment() for j, _ in self._active.values()
+            )
+            if self._chunker is not None:
+                chunk = self._chunker.propose(len(self.policy), bound)
+            else:
+                chunk = min(self.chunk_sweeps, bound)
+            pending = self._launch(chunk)
+            # Pure-Python bookkeeping runs in the shadow of the device
+            # compute (the launch above is dispatched, not yet forced).
+            busy = sum(j.num_slots for j, _ in self._active.values())
+            self._c_busy.add(chunk * busy)
+            self._c_total.add(chunk * self.slots)
+            # Advance all jobs first, THEN tap the stream: sweeps_done is
+            # current and a retiring job's final chunk is still sampled
+            # (hooks only rewrite betas, never spins, so pre-hook spins
+            # are the post-chunk spins).
+            boundary = [
+                jid
+                for jid in list(self._active)
+                if self._active[jid][0].advance(chunk)
+            ]
+            self._settle_launch(chunk, pending)
+            if self.stream is not None:
+                self.stream.record(self)
+            completed: List[JobResult] = []
+            for jid in boundary:
+                job, taken = self._active[jid]
                 self.carry = job.on_segment(self, self.carry, taken)
                 if job.done:
                     completed.append(job.finalize(self, taken))
                     self._free.extend(taken)
                     del self._active[jid]
+                    self._c_completed.add(1)
+                    tel.async_end(
+                        "job",
+                        jid,
+                        sweeps_done=job.sweeps_done,
+                        chunks=job.chunks,
+                        preemptions=job.preemptions,
+                    )
         return completed
 
     def drain(self, max_steps: int = 1_000_000) -> List[JobResult]:
@@ -822,4 +1079,14 @@ class SampleServer:
             # long-lived server's alerting reads — since-start aggregates
             # dilute a fresh latency regression to invisibility.
             "queue_wait_recent": self._wait_recent_summary(),
+            # Every number above reads the telemetry registry (the same
+            # source the Prometheus/JSON exporters scrape); this block is
+            # the registry's own health.
+            "telemetry": {
+                "enabled": self.telemetry.enabled,
+                "events_recorded": self.telemetry.num_events,
+                "events_dropped": self.telemetry.dropped_events,
+                "straggler_events": self._c_straggler.value,
+                "devices": self.devices,
+            },
         }
