@@ -116,6 +116,11 @@ SCHED_REPEATS = 8
 # The telemetry section gates a ratio of two nearly-equal walls (target
 # >= 0.95 of telemetry-off), so it needs the same extra de-noising.
 TELEMETRY_REPEATS = 8
+# Periodic-snapshot cadence for the snapshot_overhead section: ~12
+# background snapshots across one ~2.5k-sweep round — dense enough that
+# a snapshot gone blocking shows up in the wall, sparse enough to model
+# a real crash-safety cadence.
+SNAPSHOT_EVERY_SWEEPS = 200
 
 
 def run_workload(m, specs, slots: int, chunk: int, *, rung: str = "a4",
@@ -448,6 +453,105 @@ def _telemetry_overhead_section(m, specs, rows, records):
         )
 
 
+def _snapshot_overhead_section(m, specs, rows, records):
+    """Periodic-snapshots-on vs snapshots-off jobs/sec on the cb path.
+
+    DESIGN.md §Recovery promises that crash safety rides the background
+    writer, not the hot path: the device->host pool extract happens at a
+    step boundary and the npy/manifest I/O runs on a thread while serving
+    continues.  Measured the same way as the telemetry claim: the SAME
+    mixed workload through two resident servers, one snapshotting every
+    ``SNAPSHOT_EVERY_SWEEPS`` of its sweep clock, one with snapshots off,
+    rounds INTERLEAVED so shared-box noise hits both sides alike.
+
+    A snapshot is not literally free: the consistency point is a step
+    boundary, so each one pays a bounded device->host pool extract
+    (sync + copy) before the writer thread takes over.  At THIS bench's
+    toy scale (~0.1 s rounds, tiny lattice) that fixed cost reads as
+    ~10%; on production lattices the same absolute cost vanishes into
+    the chunk wall.  The committed baseline's ``overhead_ratio``
+    (jobs/sec on / jobs/sec off) is gated by check_regression.py; the
+    in-bench floor of 0.75 catches a gross regression (a snapshot gone
+    blocking, an accidental per-chunk extract) even with no baseline.
+    Bit-identity is asserted in-bench: snapshotting must never perturb
+    results.
+    """
+    import tempfile
+
+    with tempfile.TemporaryDirectory(prefix="serve_bench_snap_") as snap_dir:
+
+        def make(flag: bool) -> SampleServer:
+            srv = SampleServer(
+                m, slots=8, chunk_sweeps=CHUNK, backend="jnp", V=V,
+                rung="cb", telemetry=False,
+                snapshot_manager=snap_dir if flag else None,
+                snapshot_every_sweeps=SNAPSHOT_EVERY_SWEEPS if flag else 0,
+            )
+            # Warmup pays jit for run(chunk)/splice/extract outside the
+            # timing.
+            srv.submit(AnnealJob.constant(seed=1, sweeps=CHUNK, beta=1.0))
+            srv.drain()
+            return srv
+
+        servers = {"off": make(False), "on": make(True)}
+        best = {k: float("inf") for k in servers}
+        res: dict[str, list] = {}
+        for _ in range(TELEMETRY_REPEATS):  # same de-noising reasoning
+            for k, srv in servers.items():
+                jobs = [AnnealJob.constant(seed=s, sweeps=b, beta=be)
+                        for s, b, be in specs]
+                t0 = time.perf_counter()
+                for j in jobs:
+                    srv.submit(j)
+                by_jid = {r.jid: r for r in srv.drain()}
+                best[k] = min(best[k], time.perf_counter() - t0)
+                res[k] = [by_jid[j.jid] for j in jobs]
+        # Crash safety must never change results, and snapshots must
+        # actually have been written (counters count even with telemetry
+        # events off).
+        _check_bit_identical(res["off"], res["on"], specs,
+                             "snapshot_overhead")
+        n_snaps = servers["on"].telemetry.counter("serve.snapshots").value
+        assert n_snaps > 0, "snapshot-on server wrote no snapshots"
+        assert servers["on"].snapshot_manager.valid_steps(), (
+            "no valid snapshot on disk"
+        )
+        assert servers["off"].telemetry.counter("serve.snapshots").value == 0
+    total_sweeps = sum(b for _, b, _ in specs)
+    n_spins = m.num_spins
+    ratio = best["off"] / best["on"]  # == jobs/sec on / jobs/sec off
+    if ratio < 0.75:
+        raise AssertionError(
+            f"snapshot overhead: jobs/sec with periodic snapshots on is "
+            f"{ratio:.3f}x the snapshots-off path (in-bench floor 0.75)"
+        )
+    for k in ("off", "on"):
+        dt = best[k]
+        rec = {
+            "name": f"serve_snapshot_{k}",
+            "B": 8,
+            "rung": "cb",
+            "snapshots": k == "on",
+            "sweeps_per_sec": total_sweeps / dt,
+            "wall_clock_s": dt,
+            "jobs_per_sec": NUM_JOBS / dt,
+            "spin_flips_per_sec": total_sweeps * n_spins / dt,
+            "num_jobs": NUM_JOBS,
+            "bit_identical_to_off": True,
+        }
+        if k == "on":
+            rec["overhead_ratio"] = ratio
+            rec["snapshots_written"] = int(n_snaps)
+            rec["snapshot_every_sweeps"] = SNAPSHOT_EVERY_SWEEPS
+        records.append(rec)
+        rows.append(
+            (f"serve_snapshot_{k}_jobs_per_sec", NUM_JOBS / dt * 1e6,
+             f"{NUM_JOBS / dt:.1f} jobs/s"
+             + (f", {ratio:.3f}x of snapshots-off, {int(n_snaps)} snapshots"
+                if k == "on" else ""))
+        )
+
+
 URGENT_AT_SWEEPS = 40  # sweep-clock arrival of the urgent wide ladder
 
 
@@ -670,6 +774,11 @@ def run():
     # Telemetry overhead: the full event pipeline on vs off, same mix
     # (DESIGN.md §Observability's <= 5% claim, gated by check_regression).
     _telemetry_overhead_section(m, specs, rows, records)
+
+    # Snapshot overhead: periodic background crash-safety snapshots on vs
+    # off, same mix (DESIGN.md §Recovery's off-the-hot-path claim, gated
+    # by check_regression).
+    _snapshot_overhead_section(m, specs, rows, records)
 
     # Scheduling policies under the adversarial wide+narrow mix: FIFO vs
     # backfill vs fair (ISSUE 5 acceptance assertions inside).  Deeper

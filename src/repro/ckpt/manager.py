@@ -1,11 +1,17 @@
-"""Checkpoint manager: manifest + per-leaf npz shards, async, keep-N, atomic.
+"""Checkpoint manager: manifest + per-leaf npy shards, async, keep-N, atomic.
 
 Fault-tolerance contract:
 
-* Atomicity — a checkpoint directory is staged under ``<step>.tmp`` and
-  os.rename'd into place only after every shard and the manifest are
+* Atomicity — a checkpoint directory is staged under ``<step>.tmp<proc>``
+  and os.rename'd into place only after every shard and the manifest are
   fsynced; a crash mid-write can never produce a directory that ``latest``
-  would pick up.
+  would pick up.  Stale ``.tmp`` staging dirs left by a killed writer are
+  garbage-collected on the next scan.
+* Integrity — every shard's serialized bytes are sha256'd into the
+  manifest and re-verified on restore; a flipped bit or truncated file
+  raises ``CheckpointCorruptError`` instead of silently resuming from
+  garbage.  ``restore_latest`` treats a corrupt snapshot as absent: it
+  deletes the bad directory and falls back to the newest *valid* one.
 * Async — ``save(..., blocking=False)`` snapshots device arrays to host
   then writes on a background thread; training continues (the standard
   emergency/periodic checkpoint split at scale).
@@ -16,14 +22,26 @@ Fault-tolerance contract:
   CURRENT mesh's shardings (jax.device_put with NamedSharding), so a job
   restarted on a different topology (elastic re-mesh after node loss)
   restores transparently.
-* Keep-N garbage collection, and a ``latest_step`` scan that ignores
-  incomplete directories.
+* Keep-N garbage collection, and a ``latest_step`` scan that ignores —
+  and removes — incomplete or corrupt directories.
+
+Two payload shapes are supported:
+
+* ``save``/``restore`` — a pytree checkpoint restored into the structure
+  of a caller-provided ``like_tree`` (the training-loop API).
+* ``save_named``/``restore_named`` — a flat ``{name: ndarray}`` dict
+  whose names and dtypes are recorded in the manifest, restorable with
+  no prior knowledge of the structure (the server-snapshot API, where
+  the restorer learns the job/slot layout *from* the checkpoint).
 """
 
 from __future__ import annotations
 
+import hashlib
+import io
 import json
 import os
+import re
 import shutil
 import threading
 import time
@@ -32,10 +50,31 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A shard failed its checksum / a step dir is unreadable."""
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
+
+
+def _serialize(arr: np.ndarray) -> tuple[bytes, Optional[str]]:
+    """npy-encode one host array; returns (bytes, raw_dtype_or_None).
+
+    Non-numpy-native dtypes (bf16 etc.) are stored as a uint8 view with
+    the true dtype recorded so restore can view them back.
+    """
+    raw = None
+    if arr.dtype.kind not in "biufc":
+        raw = str(arr.dtype)
+        arr = arr.view(np.uint8)
+    buf = io.BytesIO()
+    np.save(buf, arr)
+    return buf.getvalue(), raw
 
 
 class CheckpointManager:
@@ -50,16 +89,94 @@ class CheckpointManager:
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:010d}")
 
-    def latest_step(self) -> Optional[int]:
+    def _is_valid(self, name: str) -> bool:
+        """Complete-looking step dir: manifest parses, every shard exists."""
+        full = os.path.join(self.dir, name)
+        try:
+            with open(os.path.join(full, "manifest.json")) as f:
+                manifest = json.load(f)
+            for fname in manifest["shards"].values():
+                if not os.path.exists(os.path.join(full, fname)):
+                    return False
+        except (OSError, ValueError, KeyError, TypeError):
+            return False
+        return True
+
+    def valid_steps(self) -> list[int]:
+        """Sorted steps with complete snapshots; GCs partial/corrupt dirs.
+
+        Stale ``.tmp`` staging dirs (killed writer) and non-tmp step dirs
+        that fail validation are removed — a single writer per directory
+        is assumed, so anything invalid at scan time is crash debris.
+        """
         steps = []
-        for name in os.listdir(self.dir):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                full = os.path.join(self.dir, name)
-                if os.path.exists(os.path.join(full, "manifest.json")):
-                    steps.append(int(name.split("_")[1]))
+        for name in sorted(os.listdir(self.dir)):
+            full = os.path.join(self.dir, name)
+            if not os.path.isdir(full) or not name.startswith("step_"):
+                continue
+            if ".tmp" in name:
+                shutil.rmtree(full, ignore_errors=True)
+                continue
+            m = _STEP_RE.match(name)
+            if m is None or not self._is_valid(name):
+                shutil.rmtree(full, ignore_errors=True)
+                continue
+            steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.valid_steps()
         return max(steps) if steps else None
 
     # ---- save ----
+    def _write_payload(self, step: int, items: list, extra: dict | None,
+                       names: Optional[list] = None, treedef_str: str = ""):
+        """Stage shards + manifest under .tmp, fsync, rename into place."""
+        tmp = self._step_dir(step) + f".tmp{self.proc}"
+        os.makedirs(tmp, exist_ok=True)
+        shards = {}
+        raw_dtypes = {}
+        checksums = {}
+        dtypes = {}
+        shapes = {}
+        for i, arr in enumerate(items):
+            fname = f"leaf_{self.proc}_{i:05d}.npy"
+            dtypes[str(i)] = str(arr.dtype)
+            shapes[str(i)] = list(arr.shape)
+            data, raw = _serialize(arr)
+            if raw is not None:
+                raw_dtypes[str(i)] = raw
+            checksums[str(i)] = hashlib.sha256(data).hexdigest()
+            with open(os.path.join(tmp, fname), "wb") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+            shards[str(i)] = fname
+        manifest = {
+            "step": step,
+            "num_leaves": len(items),
+            "shards": shards,
+            "raw_dtypes": raw_dtypes,
+            "checksums": checksums,
+            "dtypes": dtypes,
+            "shapes": shapes,
+            "treedef": treedef_str,
+            "time": time.time(),
+            "extra": extra or {},
+        }
+        if names is not None:
+            manifest["names"] = names
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        final = self._step_dir(step)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
     def save(self, step: int, tree: Any, *, blocking: bool = True, extra: dict | None = None):
         """Checkpoint a pytree of jax/np arrays at ``step``."""
         leaves, treedef = _flatten(tree)
@@ -67,46 +184,29 @@ class CheckpointManager:
         host_leaves = [np.asarray(l) for l in leaves]
 
         def _write():
-            tmp = self._step_dir(step) + f".tmp{self.proc}"
-            os.makedirs(tmp, exist_ok=True)
-            shards = {}
-            raw_dtypes = {}
-            for i, arr in enumerate(host_leaves):
-                fname = f"leaf_{self.proc}_{i:05d}.npy"
-                if arr.dtype.kind not in "biufc":
-                    # numpy can't round-trip ml_dtypes (bf16 etc.): store the
-                    # raw bytes and record the dtype for the view on restore.
-                    raw_dtypes[str(i)] = str(arr.dtype)
-                    arr = arr.view(np.uint8)
-                with open(os.path.join(tmp, fname), "wb") as f:
-                    np.save(f, arr)
-                    f.flush()
-                    os.fsync(f.fileno())
-                shards[str(i)] = fname
-            manifest = {
-                "step": step,
-                "num_leaves": len(host_leaves),
-                "shards": shards,
-                "raw_dtypes": raw_dtypes,
-                "treedef": str(treedef),
-                "time": time.time(),
-                "extra": extra or {},
-            }
-            mpath = os.path.join(tmp, "manifest.json")
-            with open(mpath, "w") as f:
-                json.dump(manifest, f)
-                f.flush()
-                os.fsync(f.fileno())
-            final = self._step_dir(step)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
-            self._gc()
+            self._write_payload(step, host_leaves, extra, treedef_str=str(treedef))
 
+        self.wait()  # one save in flight at a time (async OR blocking)
         if blocking:
             _write()
         else:
-            self.wait()  # one async save in flight at a time
+            self._async_thread = threading.Thread(target=_write, daemon=True)
+            self._async_thread.start()
+
+    def save_named(self, step: int, arrays: dict, *, blocking: bool = True,
+                   extra: dict | None = None):
+        """Checkpoint a flat ``{name: array}`` dict; names go in the manifest
+        so ``restore_named`` needs no like-tree."""
+        names = list(arrays.keys())
+        host = [np.asarray(arrays[k]) for k in names]
+
+        def _write():
+            self._write_payload(step, host, extra, names=names)
+
+        self.wait()  # one save in flight at a time (async OR blocking)
+        if blocking:
+            _write()
+        else:
             self._async_thread = threading.Thread(target=_write, daemon=True)
             self._async_thread.start()
 
@@ -116,24 +216,51 @@ class CheckpointManager:
             self._async_thread = None
 
     def _gc(self):
-        steps = sorted(
-            int(n.split("_")[1])
-            for n in os.listdir(self.dir)
-            if n.startswith("step_") and not n.endswith(".tmp")
-        )
-        for s in steps[: -self.keep] if self.keep else []:
+        steps = []
+        for n in os.listdir(self.dir):
+            m = _STEP_RE.match(n)
+            if m is not None:
+                steps.append(int(m.group(1)))
+        for s in sorted(steps)[: -self.keep] if self.keep else []:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     # ---- restore ----
+    def _load_shard(self, d: str, manifest: dict, i: int) -> np.ndarray:
+        """Read shard ``i``, verify its checksum, and decode the array."""
+        key = str(i)
+        path = os.path.join(d, manifest["shards"][key])
+        try:
+            with open(path, "rb") as f:
+                data = f.read()
+        except OSError as e:
+            raise CheckpointCorruptError(f"missing shard {path}: {e}") from e
+        want = manifest.get("checksums", {}).get(key)
+        if want is not None:
+            got = hashlib.sha256(data).hexdigest()
+            if got != want:
+                raise CheckpointCorruptError(
+                    f"checksum mismatch for {path}: {got} != {want}"
+                )
+        try:
+            return np.load(io.BytesIO(data))
+        except ValueError as e:
+            raise CheckpointCorruptError(f"unreadable shard {path}: {e}") from e
+
+    def _manifest(self, step: int) -> tuple[str, dict]:
+        d = self._step_dir(step)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                return d, json.load(f)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptError(f"unreadable manifest in {d}: {e}") from e
+
     def restore(self, step: int, like_tree: Any, shardings: Any = None) -> Any:
         """Load ``step`` into the structure of ``like_tree``.
 
         ``shardings``: optional matching pytree of NamedShardings (current
         mesh) — enables restore onto a different topology than the writer's.
         """
-        d = self._step_dir(step)
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        d, manifest = self._manifest(step)
         leaves, treedef = _flatten(like_tree)
         assert manifest["num_leaves"] == len(leaves), (
             manifest["num_leaves"], len(leaves),
@@ -144,7 +271,7 @@ class CheckpointManager:
         out = []
         raw_dtypes = manifest.get("raw_dtypes", {})
         for i, (like, shd) in enumerate(zip(leaves, shard_leaves)):
-            arr = np.load(os.path.join(d, manifest["shards"][str(i)]))
+            arr = self._load_shard(d, manifest, i)
             if str(i) in raw_dtypes:
                 arr = arr.view(np.dtype(like.dtype))  # raw bytes -> ml dtype
             arr = arr.astype(like.dtype) if arr.dtype != like.dtype else arr
@@ -154,9 +281,45 @@ class CheckpointManager:
                 out.append(jax.numpy.asarray(arr))
         return jax.tree_util.tree_unflatten(treedef, out), manifest.get("extra", {})
 
+    def restore_named(self, step: int) -> tuple[dict, dict]:
+        """Load a ``save_named`` checkpoint as ``({name: ndarray}, extra)``.
+
+        Arrays come back as host numpy in the writer's global layout —
+        the caller re-shards (device_put) against its own mesh.
+        """
+        d, manifest = self._manifest(step)
+        names = manifest.get("names")
+        if names is None:
+            raise CheckpointCorruptError(
+                f"{d} was not written by save_named (no names in manifest)"
+            )
+        raw_dtypes = manifest.get("raw_dtypes", {})
+        out = {}
+        for i, name in enumerate(names):
+            arr = self._load_shard(d, manifest, i)
+            key = str(i)
+            if key in raw_dtypes:
+                arr = arr.view(np.dtype(raw_dtypes[key]))
+            out[name] = arr
+        return out, manifest.get("extra", {})
+
     def restore_latest(self, like_tree: Any, shardings: Any = None):
-        step = self.latest_step()
-        if step is None:
-            return None, None, {}
-        tree, extra = self.restore(step, like_tree, shardings)
-        return step, tree, extra
+        """Restore the newest *valid* snapshot, falling back past corrupt
+        ones (each failed candidate is deleted so later scans skip it)."""
+        for step in reversed(self.valid_steps()):
+            try:
+                tree, extra = self.restore(step, like_tree, shardings)
+                return step, tree, extra
+            except CheckpointCorruptError:
+                shutil.rmtree(self._step_dir(step), ignore_errors=True)
+        return None, None, {}
+
+    def restore_latest_named(self):
+        """``restore_named`` analogue of ``restore_latest``."""
+        for step in reversed(self.valid_steps()):
+            try:
+                arrays, extra = self.restore_named(step)
+                return step, arrays, extra
+            except CheckpointCorruptError:
+                shutil.rmtree(self._step_dir(step), ignore_errors=True)
+        return None, None, {}

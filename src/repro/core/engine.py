@@ -117,6 +117,23 @@ class SweepCarry(NamedTuple):
     rng: jax.Array  # (624, B) | (624, B*V) uint32
 
 
+class PoolState(NamedTuple):
+    """A whole slot pool's resumable state on HOST, in GLOBAL layout
+    (`extract_pool`).
+
+    The server-snapshot analogue of `ParkedSlot`: every slot row of the
+    batched carry — including idle slots' stale state, whose resweeps are
+    part of the pool's deterministic trajectory — plus, on multi-tenant
+    engines, the full batched coupling tables.  Leaves are numpy arrays
+    de-sharded ONCE (one gather per leaf, not per slot), so the state is
+    mesh-independent: `splice_pool` re-shards it against whatever mesh the
+    restoring engine runs on (D=4 -> D=1 and back are both just a
+    `device_put`), and the resumed pool is bit-identical either way."""
+
+    carry: SweepCarry  # numpy leaves, global batch layout
+    tables: dict | None  # numpy batched coupling tables (multi only)
+
+
 class ParkedSlot(NamedTuple):
     """A preempted slot's complete resumable state (`park_slot`).
 
@@ -894,6 +911,73 @@ class SweepEngine:
                 check_same_topology(self.model, model)
                 self.models = self.models[:b] + (model,) + self.models[b + 1 :]
         return self.splice_slot(carry, b, parked.carry)
+
+    def extract_pool(self, carry: SweepCarry) -> PoolState:
+        """The WHOLE pool's resumable state on host, in global layout.
+
+        One `np.asarray` per carry/table leaf — on a sharded engine that
+        is one cross-device gather per leaf, not a per-slot extract loop —
+        so server snapshots cost O(leaves), independent of slot count.
+        Pure read; the carry and tables are untouched.
+        """
+        host = SweepCarry(*(np.asarray(x) for x in carry))
+        tables = (
+            {k: np.asarray(v) for k, v in self.slot_tables.items()}
+            if self.multi
+            else None
+        )
+        return PoolState(host, tables)
+
+    def splice_pool(self, pool: PoolState) -> SweepCarry:
+        """Install a `PoolState` as this engine's current pool (the exact
+        inverse of `extract_pool`; round-trips bit-exactly).
+
+        The pool is in global layout, so THIS engine's mesh — which may
+        have a different device count than the extracting engine's —
+        re-shards it with a plain `device_put` against its own shardings.
+        On multi-tenant engines the batched coupling tables are installed
+        too; slot model provenance resets to None (raw-splice semantics:
+        a later `set_slot_model` re-records it).  Returns the new carry
+        (the caller threads it through `run`, as always).
+        """
+        lanes = self._slot_lanes()
+        spins = np.asarray(pool.carry.spins)
+        want = (
+            (self.batch, self.rows, self.V)
+            if self.rung in LANE_RUNGS
+            else (self.batch, self.model.num_spins)
+        )
+        if tuple(spins.shape) != want:
+            raise ValueError(
+                f"pool spins shape {spins.shape} does not fit this engine "
+                f"(want {want}: batch={self.batch}, rung={self.rung!r})"
+            )
+        rng = np.asarray(pool.carry.rng)
+        if rng.shape[1] != self.batch * lanes:
+            raise ValueError(
+                f"pool rng has {rng.shape[1]} lane columns; this engine "
+                f"needs {self.batch * lanes}"
+            )
+        carry = SweepCarry(*(jnp.asarray(x) for x in pool.carry))
+        if self.mesh is not None:
+            carry = jax.device_put(carry, self._carry_shardings())
+        if self.multi:
+            if pool.tables is None:
+                raise ValueError(
+                    "multi-tenant engines need the pool's coupling tables"
+                )
+            tabs = {k: jnp.asarray(v) for k, v in pool.tables.items()}
+            self.slot_tables = tabs
+            if self.mesh is not None:
+                self.slot_tables = jax.device_put(
+                    tabs, self._table_shardings()
+                )
+            self.models = (None,) * self.batch
+        elif pool.tables is not None:
+            raise ValueError(
+                "pool carries coupling tables but this engine is single-model"
+            )
+        return carry
 
     def set_slot_betas(self, carry: SweepCarry, slots, betas) -> SweepCarry:
         """Rewrite the betas of the given slots (anneal-schedule advance,

@@ -33,11 +33,21 @@ Perfetto / chrome://tracing: job lifecycle tracks, engine launches with
 compile-vs-steady, scheduler decisions); ``--metrics`` prints the
 Prometheus text exposition of the server's metric registry after the
 drain (DESIGN.md §Observability).  ``--smoke`` exercises both.
+
+CRASH SAFETY (DESIGN.md §Recovery): ``--snapshot-dir`` arms whole-server
+snapshots — ``--snapshot-every K`` writes one every K sweeps off the hot
+path, and SIGTERM triggers a graceful drain (finish the in-flight chunk,
+snapshot, exit 0).  ``--resume`` restores the newest valid snapshot from
+the directory and finishes its recorded jobs instead of submitting a
+fresh mix; results are bit-identical to the uninterrupted run.
+``--smoke`` exercises the full cycle: serve with periodic snapshots,
+simulate a kill mid-drain, restore, finish, and check every job landed.
 """
 
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import numpy as np
@@ -129,6 +139,17 @@ def main(argv=None):
     ap.add_argument("--metrics", action="store_true",
                     help="print the Prometheus text exposition of the "
                          "server's metric registry after the drain")
+    ap.add_argument("--snapshot-dir", metavar="DIR", default=None,
+                    help="arm crash safety: periodic snapshots land here and "
+                         "SIGTERM drains gracefully (finish chunk, snapshot, "
+                         "exit 0)")
+    ap.add_argument("--snapshot-every", type=int, default=0, metavar="K",
+                    help="write a background snapshot every K sweeps "
+                         "(0 = only on SIGTERM; needs --snapshot-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest valid snapshot from "
+                         "--snapshot-dir and finish its recorded jobs "
+                         "instead of submitting a fresh mix")
     args = ap.parse_args(argv)
     if args.smoke:
         # 7 anneal jobs + 1 three-replica PT job = 8 jobs on 4 slots.
@@ -140,37 +161,120 @@ def main(argv=None):
         if args.trace is None:
             args.trace = "serve_smoke_trace.json"
         args.metrics = True
+        if args.snapshot_every == 0:
+            args.snapshot_every = 16  # force >=1 periodic snapshot pre-"crash"
 
-    model = ising.random_layered_model(
-        n=args.n, L=args.L, seed=args.seed, beta=args.beta
-    )
+    if args.resume and args.snapshot_dir is None:
+        ap.error("--resume needs --snapshot-dir")
+    if args.snapshot_every and args.snapshot_dir is None and not args.smoke:
+        ap.error("--snapshot-every needs --snapshot-dir")
+
     mesh = None
     if args.devices > 0:
         from repro.launch.mesh import make_slot_mesh
 
         mesh = make_slot_mesh(args.devices)
-    server = SampleServer(
-        model,
-        slots=args.slots,
-        chunk_sweeps=args.chunk,
-        rung=args.rung,
-        backend=args.backend,
-        V=args.V,
-        policy=args.policy,
-        mesh=mesh,
-    )
-    jobs = build_job_mix(args)
-    for job in jobs:
-        server.submit(job)
-    dev = f", mesh={args.devices} devices" if mesh is not None else ""
-    print(
-        f"serving {len(jobs)} jobs on {args.slots} slots "
-        f"(chunk={args.chunk} sweeps, backend={args.backend}, "
-        f"policy={args.policy}, model n={args.n} L={args.L}{dev})"
-    )
+
+    snap_tmp = None
+    snap_dir = args.snapshot_dir
+    if args.smoke and snap_dir is None:
+        snap_tmp = tempfile.TemporaryDirectory(prefix="serve_smoke_snap_")
+        snap_dir = snap_tmp.name
+
+    preemption = None
+    if snap_dir is not None:
+        from repro.runtime.ft import PreemptionHandler
+
+        preemption = PreemptionHandler()  # SIGTERM -> graceful drain
+
+    if args.resume:
+        server = SampleServer.restore(
+            snap_dir,
+            mesh=mesh,
+            snapshot_every_sweeps=args.snapshot_every or None,
+            preemption=preemption,
+        )
+        jobs = []  # the snapshot's recorded jobs are the workload
+        print(
+            f"resumed from {snap_dir} at {server.sweeps_elapsed} sweeps "
+            f"({len(server.policy)} queued, {len(server._active)} active, "
+            f"{len(server._retired)} already retired)"
+        )
+    else:
+        model = ising.random_layered_model(
+            n=args.n, L=args.L, seed=args.seed, beta=args.beta
+        )
+        server = SampleServer(
+            model,
+            slots=args.slots,
+            chunk_sweeps=args.chunk,
+            rung=args.rung,
+            backend=args.backend,
+            V=args.V,
+            policy=args.policy,
+            mesh=mesh,
+            snapshot_manager=snap_dir,
+            snapshot_every_sweeps=args.snapshot_every if snap_dir else 0,
+            preemption=preemption,
+        )
+        jobs = build_job_mix(args)
+        for job in jobs:
+            server.submit(job)
+        dev = f", mesh={args.devices} devices" if mesh is not None else ""
+        snp = f", snapshots every {args.snapshot_every} sweeps -> {snap_dir}" \
+            if snap_dir else ""
+        print(
+            f"serving {len(jobs)} jobs on {args.slots} slots "
+            f"(chunk={args.chunk} sweeps, backend={args.backend}, "
+            f"policy={args.policy}, model n={args.n} L={args.L}{dev}{snp})"
+        )
+
     t0 = time.perf_counter()
-    results = server.drain()
+    if args.smoke and not args.resume:
+        # save -> kill -> resume, end to end: serve until at least one
+        # periodic snapshot has landed and one job retired, then abandon
+        # the server (a stand-in for SIGKILL: no goodbye snapshot) and
+        # restore from the last periodic snapshot to finish the drain.
+        pre = []
+        while len(server.policy) or server._active:
+            pre.extend(server.step())
+            server.wait_snapshots()
+            if server.snapshot_manager.latest_step() is not None and pre:
+                break
+        crash_sweeps = server.sweeps_elapsed
+        snap_step = server.snapshot_manager.latest_step()
+        results = pre
+        if len(server.policy) or server._active:
+            print(
+                f"smoke: simulated crash at {crash_sweeps} sweeps "
+                f"({len(pre)} jobs already retired, last snapshot at "
+                f"sweep {snap_step})"
+            )
+            del server  # the "kill": in-flight state is gone
+            server = SampleServer.restore(snap_dir, mesh=mesh)
+            post = server.drain()
+            # Jobs retired between the snapshot and the crash are re-run
+            # by the restored server; keep one result per jid (they are
+            # bit-identical — determinism contract).
+            by_jid = {r.jid: r for r in pre}
+            by_jid.update({r.jid: r for r in post})
+            results = [by_jid[j] for j in sorted(by_jid)]
+            print(
+                f"smoke: resumed from snapshot, {len(post)} jobs finished "
+                f"after restore"
+            )
+    else:
+        results = server.drain()
     dt = time.perf_counter() - t0
+    if server.preempted:
+        step = server.snapshot_manager.latest_step()
+        print(
+            f"preempted: drained gracefully after {len(results)} jobs, "
+            f"snapshot at step {step} in {snap_dir} (resume with --resume)"
+        )
+        if snap_tmp is not None:
+            snap_tmp.cleanup()
+        return results
 
     for r in sorted(results, key=lambda r: r.jid)[:8]:
         e = r.energy if np.ndim(r.energy) == 0 else float(np.min(r.energy))
@@ -224,7 +328,10 @@ def main(argv=None):
     if args.metrics:
         print("-- metrics (Prometheus text exposition) --")
         print(server.telemetry.prometheus_text(), end="")
-    if len(results) != len(jobs):
+    if snap_tmp is not None:
+        server.wait_snapshots()
+        snap_tmp.cleanup()
+    if jobs and len(results) != len(jobs):
         raise RuntimeError(f"served {len(results)} of {len(jobs)} jobs")
     return results
 

@@ -17,6 +17,7 @@ from repro.serve_mc.scheduler import (
     SampleServer,
     make_policy,
 )
+from repro.serve_mc.snapshot import restore_server, save_snapshot, snapshot_state
 
 __all__ = [
     "AdaptiveChunker",
@@ -27,4 +28,7 @@ __all__ = [
     "PriorityBackfillPolicy",
     "SampleServer",
     "make_policy",
+    "restore_server",
+    "save_snapshot",
+    "snapshot_state",
 ]

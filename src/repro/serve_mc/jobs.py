@@ -147,6 +147,97 @@ class _ScheduledJob:
             return True
         return False
 
+    # -- snapshot/restore (serve_mc.snapshot) ---------------------------------
+    #
+    # A job serializes to a JSON-safe ``meta`` dict plus a flat
+    # ``{name: ndarray}`` dict.  ``meta`` carries everything the segment
+    # bookkeeping and the admission policy need to continue exactly where
+    # an uninterrupted run would be (progress counters, priority/user,
+    # submission seq, sweep-clock stamps); arrays carry parked-slot state
+    # and the subclass's own tensors.  The job's private model (if any) is
+    # serialized by `serve_mc.snapshot` alongside, not here.
+
+    def _snapshot_base(self) -> tuple[dict, dict]:
+        meta = {
+            "kind": self.kind,
+            "jid": self.jid,
+            "segments": list(self._segments),
+            "seg": self._seg,
+            "in_seg": self._in_seg,
+            "sweeps_done": self.sweeps_done,
+            "chunks": self.chunks,
+            "priority": self.priority,
+            "user": self.user,
+            "preemptions": self.preemptions,
+            "seq": self._seq,
+            "submit_sweep": self._submit_sweep,
+            "admit_sweep": self._admit_sweep,
+        }
+        arrays: dict = {}
+        if self.parked is not None:
+            meta["num_parked"] = len(self.parked)
+            meta["parked_tables"] = any(
+                p.tables is not None for p in self.parked
+            )
+            for i, p in enumerate(self.parked):
+                for name, v in zip(
+                    sweep_engine.SweepCarry._fields, p.carry
+                ):
+                    arrays[f"parked/{i}/carry/{name}"] = np.asarray(v)
+                if p.tables is not None:
+                    for k, v in p.tables.items():
+                        arrays[f"parked/{i}/tables/{k}"] = np.asarray(v)
+        return meta, arrays
+
+    def _restore_base(self, meta: dict, arrays: dict) -> None:
+        self.jid = meta["jid"]
+        self._seg = int(meta["seg"])
+        self._in_seg = int(meta["in_seg"])
+        self.sweeps_done = int(meta["sweeps_done"])
+        self.chunks = int(meta["chunks"])
+        self.preemptions = int(meta["preemptions"])
+        self._seq = meta["seq"]
+        self._submit_sweep = meta["submit_sweep"]
+        self._admit_sweep = meta["admit_sweep"]
+        # Wall-clock stamps cannot survive a process boundary: wait-time
+        # reporting restarts from restore time (sweep-clock waits, which
+        # the policies and tests use, are exact via the stamps above).
+        import time as _time
+
+        self._submit_time = _time.perf_counter()
+        self._admit_time = (
+            self._submit_time if self._admit_sweep is not None else None
+        )
+        if meta.get("num_parked"):
+            parked = []
+            for i in range(meta["num_parked"]):
+                carry = sweep_engine.SweepCarry(
+                    *(
+                        jnp.asarray(arrays[f"parked/{i}/carry/{name}"])
+                        for name in sweep_engine.SweepCarry._fields
+                    )
+                )
+                tables = None
+                prefix = f"parked/{i}/tables/"
+                tabs = {
+                    k[len(prefix) :]: jnp.asarray(v)
+                    for k, v in arrays.items()
+                    if k.startswith(prefix)
+                }
+                if tabs:
+                    tables = tabs
+                parked.append(sweep_engine.ParkedSlot(carry, tables))
+            self.parked = parked
+
+    def snapshot_state(self) -> tuple[dict, dict]:
+        """(json-safe meta, {name: ndarray}) capturing this job exactly."""
+        raise NotImplementedError
+
+    @classmethod
+    def from_snapshot(cls, meta: dict, arrays: dict, model=None):
+        """Rebuild a job from `snapshot_state` output (inverse, bit-exact)."""
+        raise NotImplementedError
+
 
 class AnnealJob(_ScheduledJob):
     """One slot, one seed, a piecewise-constant beta schedule.
@@ -205,6 +296,27 @@ class AnnealJob(_ScheduledJob):
             seed, [(sweeps_per_step, float(b)) for b in betas], model=model,
             priority=priority, user=user,
         )
+
+    def snapshot_state(self) -> tuple[dict, dict]:
+        meta, arrays = self._snapshot_base()
+        meta["seed"] = self.seed
+        meta["betas"] = list(self._betas)  # None entries survive as JSON null
+        if self._init_spins is not None:
+            arrays["init_spins"] = self._init_spins
+        return meta, arrays
+
+    @classmethod
+    def from_snapshot(cls, meta: dict, arrays: dict, model=None):
+        job = cls(
+            meta["seed"],
+            list(zip(meta["segments"], meta["betas"])),
+            spins=arrays.get("init_spins"),
+            model=model,
+            priority=meta["priority"],
+            user=meta["user"],
+        )
+        job._restore_base(meta, arrays)
+        return job
 
     def _beta(self, server, seg: int) -> float:
         b = self._betas[seg]
@@ -289,6 +401,37 @@ class PTJob(_ScheduledJob):
         self.swap_accept = jnp.int32(0)
         self.swap_propose = jnp.int32(0)
         self._energy_tables = None  # built on first swap for a private model
+
+    def snapshot_state(self) -> tuple[dict, dict]:
+        meta, arrays = self._snapshot_base()
+        meta["seed"] = self.seed
+        meta["sweeps_per_round"] = self._segments[0]
+        # The swap decision stream: generator columns at their exact
+        # position plus the accept/propose tallies.  `_energy_tables` is a
+        # pure cache — rebuilt from the model on first post-restore swap,
+        # bit-identically (float32 arrays round-trip exactly).
+        meta["swap_accept"] = int(self.swap_accept)
+        meta["swap_propose"] = int(self.swap_propose)
+        arrays["betas"] = self.betas
+        arrays["swap_rng"] = np.asarray(self.swap_rng)
+        return meta, arrays
+
+    @classmethod
+    def from_snapshot(cls, meta: dict, arrays: dict, model=None):
+        job = cls(
+            meta["seed"],
+            arrays["betas"],
+            num_rounds=len(meta["segments"]),
+            sweeps_per_round=meta["sweeps_per_round"],
+            model=model,
+            priority=meta["priority"],
+            user=meta["user"],
+        )
+        job._restore_base(meta, arrays)
+        job.swap_rng = jnp.asarray(arrays["swap_rng"])
+        job.swap_accept = jnp.int32(meta["swap_accept"])
+        job.swap_propose = jnp.int32(meta["swap_propose"])
+        return job
 
     # -- scheduler interface --------------------------------------------------
 

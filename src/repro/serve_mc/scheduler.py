@@ -542,6 +542,9 @@ class SampleServer:
         mesh=None,
         telemetry: bool | Telemetry = True,
         stream: ObservableStream | None = None,
+        snapshot_manager=None,
+        snapshot_every_sweeps: int = 0,
+        preemption=None,
     ):
         if chunk_sweeps == "adaptive":
             self._chunker = chunker or AdaptiveChunker()
@@ -633,6 +636,35 @@ class SampleServer:
         if wait_window < 1:
             raise ValueError(f"wait_window must be >= 1, got {wait_window}")
         self._wait_recent: deque = deque(maxlen=int(wait_window))
+        # Crash safety (DESIGN.md §Recovery): an optional CheckpointManager
+        # (or directory path) for whole-server snapshots.  With
+        # ``snapshot_every_sweeps=K`` the server snapshots itself every K
+        # sweeps of its clock, at the step boundary, via the manager's
+        # non-blocking writer; `snapshot()` can also be called explicitly.
+        # ``preemption`` (a `runtime.ft.PreemptionHandler`) arms graceful
+        # drain: `drain()` checks it between chunks and, when triggered,
+        # snapshots and returns early with ``self.preempted`` set.
+        if isinstance(snapshot_manager, str):
+            from repro.ckpt.manager import CheckpointManager
+
+            snapshot_manager = CheckpointManager(snapshot_manager)
+        self.snapshot_manager = snapshot_manager
+        if snapshot_every_sweeps < 0:
+            raise ValueError(
+                f"snapshot_every_sweeps must be >= 0, got {snapshot_every_sweeps}"
+            )
+        if snapshot_every_sweeps and snapshot_manager is None:
+            raise ValueError(
+                "snapshot_every_sweeps needs a snapshot_manager (or directory)"
+            )
+        self.snapshot_every_sweeps = int(snapshot_every_sweeps)
+        self.preemption = preemption
+        self.preempted = False
+        self._last_snapshot_sweep = 0
+        # Retirement log (jids in retirement order), bounded like the wait
+        # ring; snapshots persist it so a restored run's combined
+        # retirement order can be audited against an uninterrupted one.
+        self._retired: deque = deque(maxlen=100_000)
 
     # -- submission -----------------------------------------------------------
 
@@ -981,6 +1013,7 @@ class SampleServer:
                     completed.append(job.finalize(self, taken))
                     self._free.extend(taken)
                     del self._active[jid]
+                    self._retired.append(jid)
                     self._c_completed.add(1)
                     tel.async_end(
                         "job",
@@ -989,16 +1022,88 @@ class SampleServer:
                         chunks=job.chunks,
                         preemptions=job.preemptions,
                     )
+            if (
+                self.snapshot_every_sweeps
+                and self.sweeps_elapsed - self._last_snapshot_sweep
+                >= self.snapshot_every_sweeps
+            ):
+                # Periodic background snapshot at the step boundary: the
+                # pool gather is synchronous (it must see THIS boundary),
+                # the fsync'd writes ride the manager's writer thread.
+                self.snapshot(blocking=False)
         return completed
 
     def drain(self, max_steps: int = 1_000_000) -> List[JobResult]:
-        """Run scheduling rounds until queue and slots are empty."""
+        """Run scheduling rounds until queue and slots are empty.
+
+        With a ``preemption`` handler armed, a triggered handler (SIGTERM
+        in production, `trigger()` in tests) is honoured between chunks:
+        the in-flight chunk finishes — chunk boundaries are the only
+        consistent checkpoint — then the server snapshots (blocking, so
+        the snapshot is durable before the process exits) and returns the
+        results retired so far with ``self.preempted`` set.  A later
+        `SampleServer.restore` continues the remaining work bit-exactly.
+        """
         results: List[JobResult] = []
         for _ in range(max_steps):
             if not len(self.policy) and not self._active:
+                self.wait_snapshots()  # no dangling writer past a drain
+                return results
+            if self.preemption is not None and self.preemption.should_exit:
+                self.telemetry.instant(
+                    "sched.preempt_drain",
+                    queued=len(self.policy),
+                    active=len(self._active),
+                    sweeps_elapsed=self.sweeps_elapsed,
+                )
+                if self.snapshot_manager is not None:
+                    self.snapshot(blocking=True)
+                self.preempted = True
                 return results
             results.extend(self.step())
         raise RuntimeError(f"drain did not converge in {max_steps} steps")
+
+    # -- snapshot / restore (serve_mc/snapshot.py; DESIGN.md §Recovery) -------
+
+    def wait_snapshots(self) -> None:
+        """Join any in-flight background snapshot write (durability point:
+        after this returns, the newest snapshot is fully on disk)."""
+        if self.snapshot_manager is not None:
+            self.snapshot_manager.wait()
+
+    def snapshot(self, manager=None, *, step: int | None = None,
+                 blocking: bool = True) -> int:
+        """Write a whole-server snapshot; returns its step number.
+
+        Call between scheduling rounds (never mid-`step`): a chunk
+        boundary is the one point where pool + bookkeeping form a
+        consistent resumable state.  ``manager`` defaults to the server's
+        ``snapshot_manager``; ``step`` to the sweep clock.
+        """
+        from repro.serve_mc import snapshot as snap
+
+        mgr = manager if manager is not None else self.snapshot_manager
+        if mgr is None:
+            raise ValueError(
+                "no snapshot manager: pass one here or construct the server "
+                "with snapshot_manager=..."
+            )
+        if isinstance(mgr, str):
+            from repro.ckpt.manager import CheckpointManager
+
+            mgr = CheckpointManager(mgr)
+        step = snap.save_snapshot(self, mgr, step=step, blocking=blocking)
+        self._last_snapshot_sweep = self.sweeps_elapsed
+        return step
+
+    @classmethod
+    def restore(cls, source, **overrides) -> "SampleServer":
+        """Rebuild a server from a snapshot (`serve_mc.snapshot.
+        restore_server`) and continue bit-exactly — optionally on a
+        different device mesh (``mesh=...``) or backend."""
+        from repro.serve_mc import snapshot as snap
+
+        return snap.restore_server(source, **overrides)
 
     # -- reporting ------------------------------------------------------------
 

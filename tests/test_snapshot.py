@@ -1,0 +1,357 @@
+"""Crash-safe SampleServer: snapshot/restore resumes BIT-EXACTLY.
+
+The recovery contract (DESIGN.md §Recovery): a snapshot taken at any
+step boundary captures the whole server — queued jobs and their policy
+bookkeeping, active-job slot maps, parked (preempted) slot state, the
+full slot-pool carry with its per-slot MT19937 columns, multi-tenant
+coupling tables, chunker state, and the counters — and a server restored
+from it continues exactly as the uninterrupted run would have: same
+spins, same energies, same raw RNG, same retirement order.  This holds
+across backends (jnp + pallas-interpret), rungs (a4 + cb), tenancy, and
+device count (a D=4 snapshot restores onto D=1 and vice versa: arrays
+are stored in global layout and re-sharded on splice).
+
+The kill-and-restore test is the integration proof: a subprocess serving
+a mixed workload SIGKILLs itself mid-drain (no goodbye snapshot, exactly
+like OOM-killer/node loss), the parent restores from the last *periodic*
+snapshot and finishes the drain, and the combined run must match an
+uninterrupted reference bit for bit.  Run it with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` in the child to
+exercise the D=4 -> D=1 restore migration on a CPU-only host.
+"""
+
+import os
+import signal
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro.core import ising
+from repro.runtime.ft import PreemptionHandler
+from repro.serve_mc import AnnealJob, PTJob, SampleServer, snapshot_state
+
+_SRC = os.path.abspath(os.path.join(list(repro.__path__)[0], ".."))
+
+MODEL = ising.random_layered_model(n=8, L=16, seed=0, beta=1.0)
+# pallas forces V=LANES=128, which needs L % 128 == 0.
+PALLAS_MODEL = ising.random_layered_model(n=2, L=256, seed=4, beta=1.0)
+
+
+def _server_kwargs(backend):
+    if backend == "pallas":
+        return PALLAS_MODEL, dict(backend="pallas", V=128, interpret=True,
+                                  slots=3, chunk_sweeps=4)
+    return MODEL, dict(backend="jnp", V=4, slots=4, chunk_sweeps=4)
+
+
+def _mixed_jobs(model, multi):
+    """Deterministic mix: constants, a ramp, a 3-replica PT ladder, and —
+    multi-tenant only — a job over reseeded couplings of the lattice."""
+    jobs = [
+        AnnealJob.constant(seed=11, sweeps=10, beta=0.9, user="u0"),
+        AnnealJob.constant(seed=12, sweeps=18, beta=1.1, user="u1",
+                           priority=1),
+        AnnealJob.ramp(seed=13, beta_start=0.4, beta_end=1.2, steps=3,
+                       sweeps_per_step=4, user="u0"),
+        PTJob(seed=14, betas=np.array([0.5, 0.8, 1.2], np.float32),
+              num_rounds=3, sweeps_per_round=2, user="ladder"),
+        AnnealJob.constant(seed=15, sweeps=14, beta=1.0, user="u1"),
+    ]
+    if multi:
+        jobs.append(
+            AnnealJob.constant(seed=16, sweeps=12, beta=1.0, user="u2",
+                               model=ising.reseed_couplings(model, 7))
+        )
+    return jobs
+
+
+def _assert_results_equal(got, want, what=""):
+    assert got.jid == want.jid
+    np.testing.assert_array_equal(
+        np.asarray(got.spins), np.asarray(want.spins),
+        err_msg=f"{what}: jid {got.jid} spins",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.energy), np.asarray(want.energy),
+        err_msg=f"{what}: jid {got.jid} energy",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.magnetization), np.asarray(want.magnetization),
+        err_msg=f"{what}: jid {got.jid} magnetization",
+    )
+    assert got.sweeps_done == want.sweeps_done, f"{what}: jid {got.jid}"
+
+
+def _final_rng(server):
+    return np.asarray(server.engine.extract_pool(server.carry).carry.rng)
+
+
+# -----------------------------------------------------------------------------
+# Resume parity: snapshot mid-drain, restore, finish == uninterrupted.
+# -----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,rung", [
+    ("jnp", "a4"), ("jnp", "cb"), ("pallas", "a4"), ("pallas", "cb"),
+])
+@pytest.mark.parametrize("multi", [False, True])
+def test_resume_bitexact(tmp_path, backend, rung, multi):
+    model, kw = _server_kwargs(backend)
+
+    ref = SampleServer(model, rung=rung, policy="fair", multi_tenant=multi,
+                       **kw)
+    for j in _mixed_jobs(model, multi):
+        ref.submit(j)
+    ref_results = {r.jid: r for r in ref.drain()}
+    ref_order = list(ref._retired)
+    ref_rng = _final_rng(ref)
+
+    srv = SampleServer(model, rung=rung, policy="fair", multi_tenant=multi,
+                       snapshot_manager=str(tmp_path), **kw)
+    for j in _mixed_jobs(model, multi):
+        srv.submit(j)
+    pre = []
+    for _ in range(3):  # partway through the drain ...
+        pre.extend(srv.step())
+    step = srv.snapshot()  # ... snapshot at the step boundary
+    del srv  # and lose the process
+
+    srv2 = SampleServer.restore(str(tmp_path))
+    assert srv2.sweeps_elapsed == step
+    post = srv2.drain()
+
+    # No job is served twice (snapshot taken at the crash boundary) and
+    # every job is served once, bit-identically to the uninterrupted run.
+    assert not set(r.jid for r in pre) & set(r.jid for r in post)
+    combined = {r.jid: r for r in pre + post}
+    assert set(combined) == set(ref_results)
+    for jid, r in combined.items():
+        _assert_results_equal(r, ref_results[jid], f"{backend}/{rung}")
+    # Retirement ORDER is also invariant (the restored server's log keeps
+    # the pre-crash prefix), and so is the final pool RNG state.
+    assert list(srv2._retired) == ref_order
+    np.testing.assert_array_equal(_final_rng(srv2), ref_rng)
+
+
+# -----------------------------------------------------------------------------
+# Graceful drain: SIGTERM-style preemption mid-run, with a PARKED job in
+# the snapshot (checkpoint-preemption state survives the crash).
+# -----------------------------------------------------------------------------
+
+
+def _preempt_sequence(server):
+    """Submit a wide low-prio PT + filler, run one step, then three vip
+    jobs that preempt the ladder.  Returns results retired so far."""
+    server.submit(PTJob(seed=3, betas=np.array([0.5, 0.8, 1.2], np.float32),
+                        num_rounds=6, sweeps_per_round=2, user="ladder"))
+    server.submit(AnnealJob.constant(seed=4, sweeps=30, beta=1.0, user="u0"))
+    out = list(server.step())
+    for i in range(3):
+        server.submit(AnnealJob.constant(seed=20 + i, sweeps=6, beta=1.1,
+                                         priority=3, user="vip"))
+    out.extend(server.step())  # vips preempt: the PT job parks
+    return out
+
+
+def test_graceful_drain_parked_job_bitexact(tmp_path):
+    kw = dict(slots=4, chunk_sweeps=4, rung="cb", backend="jnp", V=4,
+              policy="backfill")
+
+    ref = SampleServer(MODEL, **kw)
+    pre_ref = _preempt_sequence(ref)
+    ref_results = {r.jid: r for r in pre_ref + ref.drain()}
+    ref_order = list(ref._retired)
+
+    handler = PreemptionHandler(install=False)  # trigger() stands in for
+    srv = SampleServer(MODEL, snapshot_manager=str(tmp_path),
+                       preemption=handler, **kw)  # SIGTERM delivery
+    pre = _preempt_sequence(srv)
+    assert srv.preemptions >= 1
+    arrays, extra = snapshot_state(srv)
+    assert any("/parked/" in k for k in arrays), (
+        "scenario must snapshot a parked job" )
+    handler.trigger()
+    pre.extend(srv.drain())  # returns early: snapshot + preempted flag
+    assert srv.preempted
+    assert srv.snapshot_manager.latest_step() is not None
+    del srv
+
+    srv2 = SampleServer.restore(str(tmp_path))
+    post = srv2.drain()
+    assert not srv2.preempted
+    combined = {r.jid: r for r in pre + post}
+    assert set(combined) == set(ref_results)
+    for jid, r in combined.items():
+        _assert_results_equal(r, ref_results[jid], "graceful-drain")
+    assert list(srv2._retired) == ref_order
+
+
+# -----------------------------------------------------------------------------
+# Periodic background snapshots: written off the hot path, results
+# untouched.
+# -----------------------------------------------------------------------------
+
+
+def test_periodic_snapshots_do_not_change_results(tmp_path):
+    kw = dict(slots=4, chunk_sweeps=4, rung="cb", backend="jnp", V=4,
+              policy="fair", multi_tenant=True)
+    ref = SampleServer(MODEL, **kw)
+    for j in _mixed_jobs(MODEL, True):
+        ref.submit(j)
+    ref_results = {r.jid: r for r in ref.drain()}
+
+    srv = SampleServer(MODEL, snapshot_manager=str(tmp_path),
+                       snapshot_every_sweeps=8, **kw)
+    for j in _mixed_jobs(MODEL, True):
+        srv.submit(j)
+    results = {r.jid: r for r in srv.drain()}
+    assert srv.snapshot_manager.valid_steps(), "no periodic snapshot landed"
+    assert set(results) == set(ref_results)
+    for jid, r in results.items():
+        _assert_results_equal(r, ref_results[jid], "periodic")
+
+
+# -----------------------------------------------------------------------------
+# Restore migration across device counts (global-layout storage).
+# -----------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="restore-migration parity needs >= 4 devices "
+    "(run with XLA_FLAGS=--xla_force_host_platform_device_count=4)",
+)
+@pytest.mark.parametrize("d_save,d_restore", [
+    (4, 4), (4, 1), (4, 2), (1, 4),
+])
+def test_restore_migration_bitexact(tmp_path, d_save, d_restore):
+    from repro.launch.mesh import make_slot_mesh
+
+    kw = dict(slots=8, chunk_sweeps=4, rung="cb", backend="jnp", V=4,
+              policy="fair", multi_tenant=True)
+    jobs = lambda: _mixed_jobs(MODEL, True) + [
+        AnnealJob.constant(seed=31, sweeps=16, beta=1.0, user="u3"),
+        AnnealJob.constant(seed=32, sweeps=9, beta=0.8, user="u3"),
+    ]
+
+    ref = SampleServer(MODEL, **kw)  # single-device reference
+    for j in jobs():
+        ref.submit(j)
+    ref_results = {r.jid: r for r in ref.drain()}
+    ref_order = list(ref._retired)
+    ref_rng = _final_rng(ref)
+
+    mesh = make_slot_mesh(d_save) if d_save > 1 else None
+    srv = SampleServer(MODEL, mesh=mesh, snapshot_manager=str(tmp_path), **kw)
+    for j in jobs():
+        srv.submit(j)
+    pre = []
+    for _ in range(3):
+        pre.extend(srv.step())
+    srv.snapshot()
+    del srv
+
+    mesh2 = make_slot_mesh(d_restore) if d_restore > 1 else None
+    srv2 = SampleServer.restore(str(tmp_path), mesh=mesh2)
+    assert srv2.devices == d_restore
+    post = srv2.drain()
+    combined = {r.jid: r for r in pre + post}
+    assert set(combined) == set(ref_results)
+    for jid, r in combined.items():
+        _assert_results_equal(r, ref_results[jid], f"D{d_save}->D{d_restore}")
+    assert list(srv2._retired) == ref_order
+    np.testing.assert_array_equal(_final_rng(srv2), ref_rng)
+
+
+# -----------------------------------------------------------------------------
+# Kill-and-restore: subprocess SIGKILLed mid-drain, restored from the
+# last PERIODIC snapshot, compared bit-exactly to an uninterrupted run.
+# -----------------------------------------------------------------------------
+
+
+def _kill_jobs():
+    jobs = [
+        AnnealJob.constant(seed=100 + i, sweeps=s, beta=0.7 + 0.05 * i,
+                           user=f"u{i % 3}", priority=1 if i == 4 else 0)
+        for i, s in enumerate([12, 20, 28, 16, 24, 40, 36, 18])
+    ]
+    jobs.append(PTJob(seed=99, betas=np.array([0.5, 0.9, 1.3], np.float32),
+                      num_rounds=5, sweeps_per_round=2, user="ladder"))
+    jobs.append(AnnealJob.constant(
+        seed=42, sweeps=22, beta=1.0, user="u2",
+        model=ising.reseed_couplings(MODEL, 7)))
+    return jobs
+
+
+_KILL_KW = dict(slots=4, chunk_sweeps=4, rung="cb", backend="jnp", V=4,
+                policy="fair", multi_tenant=True)
+
+
+def _kill_worker(snap_dir, devices):
+    """Child: serve with periodic snapshots, then SIGKILL itself at the
+    first step boundary where a complete snapshot exists, some jobs have
+    retired, and work remains — a crash mid-drain, no goodbye snapshot."""
+    mesh = None
+    if devices > 1:
+        from repro.launch.mesh import make_slot_mesh
+
+        mesh = make_slot_mesh(devices)
+    server = SampleServer(MODEL, mesh=mesh, snapshot_manager=snap_dir,
+                          snapshot_every_sweeps=8, **_KILL_KW)
+    for j in _kill_jobs():
+        server.submit(j)
+    while len(server.policy) or server._active:
+        server.step()
+        server.wait_snapshots()
+        if (server.snapshot_manager.latest_step() is not None
+                and server._retired
+                and (len(server.policy) or server._active)):
+            os.kill(os.getpid(), signal.SIGKILL)
+    sys.exit(3)  # drained without crashing: workload too small
+
+
+@pytest.mark.parametrize("devices", [0, 4])
+def test_kill_and_restore_bitexact(tmp_path, devices):
+    snap = str(tmp_path / "snaps")
+    env = dict(os.environ, PYTHONPATH=_SRC)
+    if devices:
+        # The child forces its own host devices: the D=4 -> D=1 restore
+        # migration runs on ANY machine, no accelerators needed.
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--worker", snap,
+         str(devices)],
+        env=env, capture_output=True, timeout=600,
+    )
+    assert proc.returncode == -signal.SIGKILL, (
+        f"worker exited {proc.returncode}, wanted SIGKILL:\n"
+        f"{proc.stderr.decode()[-2000:]}"
+    )
+
+    ref = SampleServer(MODEL, **_KILL_KW)
+    for j in _kill_jobs():
+        ref.submit(j)
+    ref_results = {r.jid: r for r in ref.drain()}
+    ref_order = list(ref._retired)
+
+    server = SampleServer.restore(snap)  # parent restores on ONE device
+    already = set(server._retired)  # retired before the snapshot: done
+    post = server.drain()
+    got = {r.jid: r for r in post}
+    # Jobs retired between the snapshot and the SIGKILL are simply re-run
+    # (their results died with the child); everything else resumes.  The
+    # union must cover the workload exactly, bit-identically.
+    assert already | set(got) == set(ref_results)
+    for jid, r in got.items():
+        _assert_results_equal(r, ref_results[jid], f"kill/D{devices}")
+    assert list(server._retired) == ref_order
+
+
+if __name__ == "__main__":
+    if len(sys.argv) >= 4 and sys.argv[1] == "--worker":
+        _kill_worker(sys.argv[2], int(sys.argv[3]))
+    raise SystemExit(f"unknown argv: {sys.argv[1:]}")

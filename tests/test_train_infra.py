@@ -201,6 +201,58 @@ def test_preemption_handler_flag():
     assert h.should_exit
 
 
+def test_preemption_handler_chains_previous_handler():
+    """Installing over an existing handler must not swallow it: the signal
+    sets our flag AND still reaches whoever was registered before."""
+    import signal
+
+    seen = []
+    old = signal.signal(signal.SIGUSR1, lambda s, f: seen.append(s))
+    try:
+        h = PreemptionHandler(signals=(signal.SIGUSR1,))
+        assert h.installed
+        os.kill(os.getpid(), signal.SIGUSR1)
+        assert h.should_exit
+        assert seen == [signal.SIGUSR1]  # previous handler still ran
+        h.uninstall()
+        assert signal.getsignal(signal.SIGUSR1) is old or callable(
+            signal.getsignal(signal.SIGUSR1)
+        )
+    finally:
+        signal.signal(signal.SIGUSR1, signal.SIG_DFL)
+
+
+def test_preemption_handler_uninstall_restores_default():
+    import signal
+
+    signal.signal(signal.SIGUSR1, signal.SIG_DFL)
+    h = PreemptionHandler(signals=(signal.SIGUSR1,))
+    assert h.installed
+    h.uninstall()
+    assert signal.getsignal(signal.SIGUSR1) is signal.SIG_DFL
+    assert not h.installed
+
+
+def test_preemption_handler_non_main_thread_install():
+    """signal.signal raises off the main thread; the handler must degrade
+    to an uninstalled-but-usable flag instead of crashing the worker."""
+    import threading
+
+    out = {}
+
+    def worker():
+        h = PreemptionHandler()  # would raise ValueError unguarded
+        out["installed"] = h.installed
+        h.trigger()
+        out["should_exit"] = h.should_exit
+
+    t = threading.Thread(target=worker)
+    t.start()
+    t.join()
+    assert out["installed"] is False
+    assert out["should_exit"] is True
+
+
 def test_elastic_plan_shrinks_mesh():
     shape, axes = elastic_plan(512, model_parallel=16)
     assert shape == (2, 16, 16) and axes == ("pod", "data", "model")
