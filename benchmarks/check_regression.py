@@ -104,6 +104,13 @@ THRESHOLDS = (
          min_ratio=0.95),
     dict(bench="serve", record="serve_sharded_D4", metric="speedup_vs_D1",
          min_ratio=0.5),
+    # Placement-aware admission: affine must keep PT swap gathers
+    # in-device on the D=4 PT-heavy mix.  The ratio (affine cross swaps /
+    # flat cross swaps) is pure placement arithmetic — deterministic 0.0
+    # while the rebalancer keeps every cap-sized ladder device-local —
+    # so the gate is exact: any cross-device swap under affine trips it.
+    dict(bench="serve", record="serve_placement_D4", metric="cross_swap_ratio",
+         min_ratio=0.95, direction="lower"),
     # Colored sweeps must keep their lead over the sequential rung.
     dict(bench="kernel", record="kernel_cb_jnp_paper_B8", metric="speedup_vs_a4",
          min_ratio=0.5),

@@ -26,6 +26,11 @@ The serving claim of DESIGN.md §Service, measured three ways:
   the asserted D=4 >= 2x D=1 bar holds on any machine, including this
   single-core box where forced host devices cannot show wall speedup
   (wall ``speedup_vs_D1`` is reported and baseline-gated, not asserted).
+* placement (cb rung, D=4 forced host devices): device-affine admission
+  vs the flat (legacy lowest-index) free list on a PT-heavy mix of R=2
+  ladders — affine must execute strictly fewer cross-device swap
+  gathers with BIT-IDENTICAL per-job results (ISSUE 9 acceptance); the
+  deterministic ``cross_swap_ratio`` is gated by check_regression.
 * telemetry overhead (cb rung): the same mix with the full observability
   event pipeline on vs telemetry off, interleaved rounds — measures the
   DESIGN.md §Observability <= 5% overhead claim as ``overhead_ratio``
@@ -91,6 +96,14 @@ SHARDED_SLOTS_PER_DEVICE = 4
 SHARDED_NUM_JOBS = 32
 SHARDED_JOB_SWEEPS = 8 * CHUNK
 SHARDED_MODEL_L = 32
+# Placement section: D=4 forced devices, 2 slots per device (cap=2), so
+# every R=2 PT ladder fits on one device — affine placement keeps the
+# round-boundary swap gathers in-device while the flat free list lets
+# ladders straddle device boundaries.
+PLACEMENT_DEVICES = 4
+PLACEMENT_SLOTS_PER_DEVICE = 2
+PLACEMENT_NUM_LADDERS = 6
+PLACEMENT_PT_ROUNDS = 8
 
 
 def job_specs(num_jobs: int, seed: int, chunk: int):
@@ -370,6 +383,171 @@ def _sharded_section(rows, records):
              f"{o['jobs_per_sec']:.1f} jobs/s over {o['slots']} slots on "
              f"{d} devices, {o['sweeps_elapsed']} sweeps{extra}")
         )
+
+
+_PLACEMENT_MARK = "PLACEMENT_RESULT "
+
+
+def _placement_jobs():
+    """PT-heavy mix: R=2 ladders interleaved with mixed-budget anneals.
+
+    The interleaving is the point: under ``placement="flat"`` (lowest
+    global slot indices, the pre-placement behaviour) the first ladder
+    lands on slots (1, 2) — straddling the device boundary at D=4 with
+    2 slots per device — and the staggered anneal budgets keep the free
+    list fragmented so later ladders straddle too.  Device-affine
+    placement packs every R=2 ladder onto one device instead (cap is 2),
+    so its round-boundary swaps take the in-device fast path.
+    """
+    jobs = []
+    for i in range(PLACEMENT_NUM_LADDERS):
+        jobs.append(AnnealJob.constant(
+            seed=3000 + i, sweeps=(3 + 2 * (i % 3)) * CHUNK, beta=0.8))
+        jobs.append(PTJob(
+            seed=3100 + i, betas=[0.6, 1.0],
+            num_rounds=PLACEMENT_PT_ROUNDS, sweeps_per_round=CHUNK))
+    return jobs
+
+
+def _placement_worker(mode: str) -> None:
+    """Child-process body: serve the PT-heavy mix at D=4 under one
+    placement mode and print one tagged JSON result line (same forced
+    host-device subprocess dance as ``_sharded_worker``)."""
+    import jax
+
+    from repro.launch.mesh import make_slot_mesh
+
+    d = PLACEMENT_DEVICES
+    if len(jax.devices()) < d:
+        raise SystemExit(
+            f"placement worker: need {d} devices, see {len(jax.devices())} "
+            "(XLA_FLAGS not applied?)"
+        )
+    m = ising.random_layered_model(n=MODEL_N, L=SHARDED_MODEL_L, seed=0, beta=1.0)
+    slots = PLACEMENT_SLOTS_PER_DEVICE * d
+    srv = SampleServer(
+        m, slots=slots, chunk_sweeps=CHUNK, backend="jnp", V=V, rung="cb",
+        mesh=make_slot_mesh(d), telemetry=False, placement=mode,
+    )
+    # Warmup pays jit for run(chunk) + splice/extract outside the timing.
+    srv.submit(AnnealJob.constant(seed=1, sweeps=CHUNK, beta=1.0))
+    srv.drain()
+    base = srv.stats()["placement"]
+    best, counters = None, None
+    for _ in range(REPEATS):
+        jobs = _placement_jobs()
+        sweeps0 = srv.stats()["sweeps_elapsed"]
+        t0 = time.perf_counter()
+        for j in jobs:
+            srv.submit(j)
+        by_jid = {r.jid: r for r in srv.drain()}
+        dt = time.perf_counter() - t0
+        sweeps = srv.stats()["sweeps_elapsed"] - sweeps0
+        if counters is None:
+            # Placement decisions and swap routing are deterministic per
+            # round; the first round's counter deltas are THE counts.
+            st = srv.stats()["placement"]
+            counters = {k: st[k] - base[k]
+                        for k in ("affine", "spanning", "rebalance_migrations",
+                                  "pt_swap_local", "pt_swap_cross")}
+        h = hashlib.sha256()
+        for j in jobs:
+            r = by_jid[j.jid]
+            h.update(np.ascontiguousarray(r.spins).tobytes())
+            h.update(np.float64(r.energy).tobytes())
+        out = {
+            "placement": mode,
+            "slots": slots,
+            "num_jobs": len(jobs),
+            "wall_s": dt,
+            "sweeps_elapsed": int(sweeps),
+            "jobs_per_sec": len(jobs) / dt,
+            "spins_sha256": h.hexdigest(),
+            **counters,
+        }
+        # Counters and the hash are deterministic; best-of de-noises wall.
+        if best is None or dt < best["wall_s"]:
+            best = out
+    print(_PLACEMENT_MARK + json.dumps(best))
+
+
+def _spawn_placement_worker(mode: str) -> dict:
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if "xla_force_host_platform_device_count" not in f]
+    flags.append(
+        f"--xla_force_host_platform_device_count={PLACEMENT_DEVICES}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serve_bench", "--placement-worker",
+         mode],
+        env=env, cwd=REPO_ROOT, capture_output=True, text=True,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"placement worker mode={mode} failed "
+            f"(rc={proc.returncode}):\n{proc.stdout}\n{proc.stderr}"
+        )
+    lines = [ln for ln in proc.stdout.splitlines()
+             if ln.startswith(_PLACEMENT_MARK)]
+    if not lines:
+        raise RuntimeError(
+            f"placement worker mode={mode}: no result line\n{proc.stdout}")
+    return json.loads(lines[-1][len(_PLACEMENT_MARK):])
+
+
+def _placement_section(rows, records):
+    """Device-affine vs flat slot placement on the PT-heavy mix at D=4.
+
+    Asserts the ISSUE 9 acceptance bar in-bench: affine placement
+    executes strictly fewer cross-device swap gathers than the flat
+    (legacy lowest-index) free list on the same workload, and per-job
+    results are BIT-IDENTICAL — placement decides WHERE, never WHAT.
+    The gated ``cross_swap_ratio`` (affine cross swaps / flat cross
+    swaps) is deterministic: 0.0 as long as the rebalancer keeps every
+    R=2 ladder device-local.
+    """
+    outs = {mode: _spawn_placement_worker(mode)
+            for mode in ("affine", "flat")}
+    a, f = outs["affine"], outs["flat"]
+    if a["spins_sha256"] != f["spins_sha256"]:
+        raise AssertionError(
+            "placement acceptance: affine vs flat per-job results differ "
+            "(placement must not change WHAT, only WHERE)"
+        )
+    if a["pt_swap_cross"] >= f["pt_swap_cross"]:
+        raise AssertionError(
+            f"placement acceptance: affine cross-device swap gathers "
+            f"({a['pt_swap_cross']}) not below flat ({f['pt_swap_cross']})"
+        )
+    swaps = a["pt_swap_local"] + a["pt_swap_cross"]
+    rec = {
+        "name": "serve_placement_D4",
+        "B": a["slots"],
+        "rung": "cb",
+        "devices": PLACEMENT_DEVICES,
+        "num_jobs": a["num_jobs"],
+        "wall_clock_s": a["wall_s"],
+        "sweeps_per_sec": a["sweeps_elapsed"] / a["wall_s"],
+        "jobs_per_sec": a["jobs_per_sec"],
+        "jobs_per_sec_flat": f["jobs_per_sec"],
+        "pt_swap_cross_affine": a["pt_swap_cross"],
+        "pt_swap_cross_flat": f["pt_swap_cross"],
+        "pt_swap_local_affine": a["pt_swap_local"],
+        "cross_swap_ratio": a["pt_swap_cross"] / max(1, f["pt_swap_cross"]),
+        "local_swap_fraction": a["pt_swap_local"] / max(1, swaps),
+        "spanning_placements_affine": a["spanning"],
+        "rebalance_migrations_affine": a["rebalance_migrations"],
+        "bit_identical_to_flat": True,
+    }
+    records.append(rec)
+    rows.append(
+        ("serve_placement_D4_cross_swaps",
+         float(a["pt_swap_cross"]),
+         f"{a['pt_swap_cross']} cross-device swap gathers (affine) vs "
+         f"{f['pt_swap_cross']} (flat) over {swaps} PT swaps, "
+         f"{a['rebalance_migrations']} migrations, bit-identical")
+    )
 
 
 def _telemetry_overhead_section(m, specs, rows, records):
@@ -792,6 +970,11 @@ def run():
     # subprocess per D (hash-parity + sweep-clock scaling asserted inside).
     _sharded_section(rows, records)
 
+    # Placement: device-affine vs flat free list on a PT-heavy mix at
+    # D=4 (ISSUE 9 acceptance: fewer cross-device swap gathers, per-job
+    # results bit-identical; cross_swap_ratio gated by check_regression).
+    _placement_section(rows, records)
+
     path = write_bench_json("serve", records)
     rows.append(("serve_bench_json", 0.0, path))
     return rows
@@ -800,6 +983,8 @@ def run():
 if __name__ == "__main__":
     if len(sys.argv) > 2 and sys.argv[1] == "--sharded-worker":
         _sharded_worker(int(sys.argv[2]))
+    elif len(sys.argv) > 2 and sys.argv[1] == "--placement-worker":
+        _placement_worker(sys.argv[2])
     else:
         for r in run():
             print(",".join(str(x) for x in r))

@@ -764,6 +764,19 @@ class SweepEngine:
         """RNG lane columns owned by one slot."""
         return self.V if self.rung in LANE_RUNGS else 1
 
+    def slot_device(self, b: int) -> int:
+        """Device owning global slot ``b`` (0 when unsharded).
+
+        The mesh shards the batch axis as contiguous ``[D, B/D]`` blocks
+        (`_carry_pspecs`), so ownership is a pure function of the index —
+        the fact the scheduler's placement-aware admission builds on: a
+        job whose slots share a device keeps its collective phases (PT
+        swaps) on-device instead of paying a cross-device gather.
+        """
+        if self.mesh is None:
+            return 0
+        return int(b) // (self.batch // self.mesh.shape["data"])
+
     def init_slot_carry(
         self,
         seed: int = 0,

@@ -13,8 +13,10 @@ from repro.serve_mc.jobs import AnnealJob, JobResult, PTJob
 from repro.serve_mc.scheduler import (
     AdaptiveChunker,
     AdmissionPolicy,
+    PlacementPlanner,
     PriorityBackfillPolicy,
     SampleServer,
+    SlotPool,
     make_policy,
 )
 from repro.serve_mc.snapshot import restore_server, save_snapshot, snapshot_state
@@ -25,8 +27,10 @@ __all__ = [
     "AnnealJob",
     "JobResult",
     "PTJob",
+    "PlacementPlanner",
     "PriorityBackfillPolicy",
     "SampleServer",
+    "SlotPool",
     "make_policy",
     "restore_server",
     "save_snapshot",

@@ -32,6 +32,7 @@ runs bit for bit (DESIGN.md §Multi-tenancy).
 
 from __future__ import annotations
 
+import time
 from typing import NamedTuple, Sequence
 
 import jax.numpy as jnp
@@ -172,6 +173,16 @@ class _ScheduledJob:
             "seq": self._seq,
             "submit_sweep": self._submit_sweep,
             "admit_sweep": self._admit_sweep,
+            # Wall-clock wait ACCRUED so far for a still-queued job.
+            # Restore re-anchors `_submit_time` to ``now - waited_s``, so
+            # queue-wait reporting is downtime-invariant: the seconds a
+            # process spent dead between save and restore never show up
+            # as queue latency (tests/test_placement.py pins this).
+            "waited_s": (
+                time.perf_counter() - self._submit_time
+                if self._submit_time is not None and self._admit_sweep is None
+                else None
+            ),
         }
         arrays: dict = {}
         if self.parked is not None:
@@ -199,12 +210,15 @@ class _ScheduledJob:
         self._seq = meta["seq"]
         self._submit_sweep = meta["submit_sweep"]
         self._admit_sweep = meta["admit_sweep"]
-        # Wall-clock stamps cannot survive a process boundary: wait-time
-        # reporting restarts from restore time (sweep-clock waits, which
-        # the policies and tests use, are exact via the stamps above).
-        import time as _time
-
-        self._submit_time = _time.perf_counter()
+        # Wall-clock stamps cannot survive a process boundary raw, so a
+        # queued job's submit time is re-anchored to ``now - waited_s``:
+        # the wait it had ACCRUED at snapshot time carries over, while
+        # process downtime between save and restore contributes nothing
+        # (downtime-invariant queue-wait; sweep-clock waits, which the
+        # policies use, are exact via the stamps above either way).
+        now = time.perf_counter()
+        waited = meta.get("waited_s")
+        self._submit_time = now - float(waited) if waited is not None else now
         self._admit_time = (
             self._submit_time if self._admit_sweep is not None else None
         )
@@ -479,7 +493,20 @@ class PTJob(_ScheduledJob):
         eng = server.engine
         parity = (self._seg - 1) % 2  # round index just completed, as the
         # standalone driver's ``r % 2``
+        # Placement-aware routing: the cross-device energy gather is only
+        # needed when the ladder actually SPANS devices.  A device-local
+        # placement (what affine admission produces) takes the same
+        # in-device `swap_phase` fast path as an unsharded server — its
+        # slot gather touches one device's shard only.  Both paths share
+        # `_swap_decide`, so routing by placement is bit-invisible
+        # (tests/test_placement.py).
+        spans = (
+            eng.mesh is not None
+            and len({eng.slot_device(b) for b in slots}) > 1
+        )
         if eng.mesh is not None:
+            (server._c_swap_cross if spans else server._c_swap_local).add(1)
+        if spans:
             # Cross-device path: a ladder spanning devices must NOT gather
             # its slots' spins (that is the whole carry).  Each device
             # evaluates its own slots' energies (`slot_energies`, zero

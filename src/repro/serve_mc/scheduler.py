@@ -64,11 +64,16 @@ on a single-model server (DESIGN.md §Multi-tenancy).
 ``mesh=...`` (a 1-D ``("data",)`` mesh, `launch.mesh.make_slot_mesh`)
 shards the slot pool over D devices: ``slots`` stays the GLOBAL count,
 every chunk advances all slots as one `shard_map` launch with zero
-cross-device traffic, and the scheduler/policies are unchanged — slot
-indices are global, GSPMD resolves (device, local slot).  PT swap phases
-take the cross-device path (per-device energies, O(R) scalars gathered).
-Bit-exactness extends across the mesh: D devices == 1 device for every
-job (DESIGN.md §Mesh, tests/test_sharded.py).
+cross-device traffic.  Admission is PLACEMENT-AWARE (`SlotPool`): free
+lists are keyed by device over the mesh's contiguous [D, B/D] layout,
+policies plan placements (not just jobs), multi-slot jobs — PT ladders
+above all — pack onto ONE device whenever any device has room (spanning
+only under fragmentation, and a chunk-boundary rebalancer migrates
+parked slots to undo even that), and a device-local ladder's swap phase
+takes the in-device fast path instead of the cross-device energy gather.
+Bit-exactness extends across the mesh AND across placements: D devices
+== 1 device == any slot assignment for every job (DESIGN.md §Mesh,
+tests/test_sharded.py, tests/test_placement.py).
 
 TELEMETRY (DESIGN.md §Observability): the server owns a
 `repro.obs.Telemetry` registry — counters/gauges/histograms that
@@ -91,6 +96,7 @@ so one straggling device is detected, not averaged away.
 
 from __future__ import annotations
 
+import bisect
 import time
 from collections import Counter, defaultdict, deque
 from typing import List
@@ -124,15 +130,262 @@ def _job_cost(job) -> int:
     return job.num_slots * job.total_remaining()
 
 
+class SlotPool:
+    """Free lists keyed by DEVICE over the global slot index space.
+
+    The mesh lays the batch axis out as contiguous ``[D, B/D]`` blocks
+    (DESIGN.md §Mesh), so global slot ``b`` lives on device ``b // (B/D)``
+    — a pure function of the index, which is what lets the scheduler name
+    locality instead of letting GSPMD guess it.  The pool keeps one SORTED
+    free list per device (``bisect.insort`` on release; the old flat list
+    re-sorted on every admission) and guards every transition: releasing a
+    slot that is already free, or taking one that is not, raises instead
+    of silently double-booking a launch.
+
+    ``mode`` picks the allocation discipline:
+
+    * ``"affine"`` (the default) packs a multi-slot job onto ONE device
+      whenever any device has room — best-fit over the per-device free
+      counts, so narrow jobs fill the emptiest-fitting device last and a
+      wide ladder keeps finding whole devices — and falls back to a
+      SPANNING placement (fewest devices, most-free first) only when
+      fragmentation forces it.  Placement never changes results (slot
+      state is slot-private); it changes which PT swap phases stay on the
+      in-device fast path.
+    * ``"flat"`` reproduces the historical single-list behavior exactly
+      (lowest global indices first, devices ignored) — the baseline the
+      placement bench compares against.
+
+    With ``devices == 1`` the two modes coincide, so a single-device
+    server is bit-and-schedule-identical to the pre-placement code.
+    """
+
+    def __init__(self, slots: int, devices: int = 1, mode: str = "affine"):
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        if slots % devices != 0:
+            raise ValueError(
+                f"slots {slots} must divide evenly over {devices} devices"
+            )
+        if mode not in ("affine", "flat"):
+            raise ValueError(
+                f"placement mode must be 'affine' or 'flat', got {mode!r}"
+            )
+        self.slots = int(slots)
+        self.devices = int(devices)
+        self.cap = self.slots // self.devices
+        self.mode = mode
+        self._free: list[list[int]] = [
+            list(range(d * self.cap, (d + 1) * self.cap))
+            for d in range(self.devices)
+        ]
+
+    def device_of(self, b: int) -> int:
+        """Device owning global slot ``b`` (contiguous [D, B/D] blocks)."""
+        return int(b) // self.cap
+
+    @property
+    def total_free(self) -> int:
+        return sum(len(f) for f in self._free)
+
+    def free_by_device(self) -> list[int]:
+        return [len(f) for f in self._free]
+
+    def free_on(self, d: int) -> list[int]:
+        return list(self._free[d])
+
+    def flat_free(self) -> list[int]:
+        """All free slots as one sorted global list (snapshot format)."""
+        return [b for f in self._free for b in f]
+
+    def clone(self) -> "SlotPool":
+        out = SlotPool.__new__(SlotPool)
+        out.slots, out.devices = self.slots, self.devices
+        out.cap, out.mode = self.cap, self.mode
+        out._free = [list(f) for f in self._free]
+        return out
+
+    def release(self, b: int) -> None:
+        """Return one slot to its device's free list (sorted insert);
+        raises on double-free — a slot on a free list twice silently
+        double-books a later launch, the bug class this pool closes."""
+        b = int(b)
+        if not 0 <= b < self.slots:
+            raise ValueError(f"slot {b} outside pool of {self.slots}")
+        f = self._free[self.device_of(b)]
+        i = bisect.bisect_left(f, b)
+        if i < len(f) and f[i] == b:
+            raise RuntimeError(f"slot {b} released twice (double-free)")
+        f.insert(i, b)
+
+    def release_all(self, slots) -> None:
+        for b in slots:
+            self.release(b)
+
+    def take(self, slots) -> None:
+        """Claim specific slots; raises if any is not currently free."""
+        for b in slots:
+            b = int(b)
+            f = self._free[self.device_of(b)]
+            i = bisect.bisect_left(f, b)
+            if i >= len(f) or f[i] != b:
+                raise RuntimeError(
+                    f"slot {b} is not free (placement double-books slots)"
+                )
+            del f[i]
+
+    def _take_lowest(self, d: int, n: int) -> list[int]:
+        taken, self._free[d] = self._free[d][:n], self._free[d][n:]
+        return taken
+
+    def alloc(self, n: int, avoid: int | None = None) -> tuple[int, ...]:
+        """Allocate ``n`` slots under the pool's placement mode.
+
+        ``avoid`` (affine mode) steers the placement off one device —
+        other devices are preferred at every stage — but is a preference,
+        not a guarantee: callers enforcing a hard budget on the avoided
+        device count the returned slots themselves.
+        """
+        if n < 1:
+            raise ValueError(f"alloc needs n >= 1, got {n}")
+        if n > self.total_free:
+            raise RuntimeError(
+                f"alloc({n}) with only {self.total_free} slots free"
+            )
+        if self.mode == "flat":
+            # Historical behavior: lowest global indices, devices ignored.
+            taken: list[int] = []
+            for d in range(self.devices):
+                take = min(n - len(taken), len(self._free[d]))
+                taken.extend(self._take_lowest(d, take))
+                if len(taken) == n:
+                    break
+            return tuple(taken)
+        # Device-affine: best-fit device (fewest free slots that still fit,
+        # ties to the lowest index) keeps the emptiest devices whole for
+        # wide ladders; `avoid` is considered only when nothing else fits.
+        fits = [d for d in range(self.devices) if len(self._free[d]) >= n]
+        pick = [d for d in fits if d != avoid] or fits
+        if pick:
+            d = min(pick, key=lambda d: (len(self._free[d]), d))
+            return tuple(self._take_lowest(d, n))
+        # Spanning fallback: fragmentation forces a cross-device placement;
+        # take from the most-free devices first so the job straddles as
+        # few devices as possible (the avoided device contributes last).
+        order = sorted(
+            (d for d in range(self.devices) if self._free[d]),
+            key=lambda d: (d == avoid, -len(self._free[d]), d),
+        )
+        taken = []
+        for d in order:
+            take = min(n - len(taken), len(self._free[d]))
+            taken.extend(self._take_lowest(d, take))
+            if len(taken) == n:
+                break
+        return tuple(taken)
+
+    def restore_free(self, flat) -> None:
+        """Reset the free lists from a flat global list (snapshot restore:
+        the per-device keying is recomputed for THIS pool's device count,
+        which is how a D=4 snapshot restores onto D=1 and vice versa)."""
+        for f in self._free:
+            f.clear()
+        self.release_all(int(b) for b in flat)
+
+
+class PlacementPlanner(int):
+    """The free-pool view handed to `AdmissionPolicy.plan`.
+
+    Subclasses ``int`` so the historical ``plan(free, active)`` contract
+    survives unchanged: custom policies that treat ``free`` as the
+    free-slot count (compare, subtract) keep working and may keep
+    returning bare jobs — the server then places them itself.  Built-in
+    policies use the placement API instead: `alloc`/`putback` simulate
+    placements against a PRIVATE clone of the server's pool (the real
+    pool mutates only when the server executes the plan), `release_job`
+    models a planned preemption, and `slots_of` exposes where each active
+    job sits so reservations can count freed slots per device.
+    """
+
+    def __new__(cls, pool: SlotPool, held: dict | None = None):
+        return int.__new__(cls, pool.total_free)
+
+    def __init__(self, pool: SlotPool, held: dict | None = None):
+        self._pool = pool.clone()
+        self._held = dict(held or {})  # id(job) -> slots tuple
+
+    @classmethod
+    def from_counts(cls, free: int, active=()) -> "PlacementPlanner":
+        """A single-device planner synthesized from bare counts — the
+        adapter behind direct ``plan(free_count, active)`` calls."""
+        active = list(active)
+        total = int(free) + sum(j.num_slots for j in active)
+        pool = SlotPool(max(total, 1), devices=1)
+        if total == 0:
+            pool.take((0,))  # the padding slot is not actually free
+        held, nxt = {}, int(free)
+        for j in active:
+            slots = tuple(range(nxt, nxt + j.num_slots))
+            pool.take(slots)
+            held[id(j)] = slots
+            nxt += j.num_slots
+        return cls(pool, held)
+
+    @property
+    def devices(self) -> int:
+        return self._pool.devices
+
+    @property
+    def mode(self) -> str:
+        return self._pool.mode
+
+    @property
+    def cap(self) -> int:
+        return self._pool.cap
+
+    @property
+    def total_free(self) -> int:
+        return self._pool.total_free
+
+    def free_by_device(self) -> list[int]:
+        return self._pool.free_by_device()
+
+    def device_of(self, b: int) -> int:
+        return self._pool.device_of(b)
+
+    def slots_of(self, job) -> tuple:
+        return self._held.get(id(job), ())
+
+    def alloc(self, job, avoid: int | None = None) -> tuple[int, ...]:
+        slots = self._pool.alloc(job.num_slots, avoid=avoid)
+        self._held[id(job)] = slots
+        return slots
+
+    def putback(self, job) -> None:
+        """Undo a simulated `alloc` (the candidate was rejected)."""
+        self._pool.release_all(self._held.pop(id(job), ()))
+
+    def release_job(self, job) -> tuple:
+        """Model a planned preemption: the victim's slots free up."""
+        slots = self._held.pop(id(job), ())
+        self._pool.release_all(slots)
+        return slots
+
+
 class AdmissionPolicy:
     """FIFO admission: fill free slots in strict submission order.
 
     The base class doubles as the policy interface: `enqueue` receives
     submitted (and re-queued preempted) jobs, `plan` returns one round's
-    ``(preempt_jobs, admit_jobs)`` given the free-slot count and the
-    currently active jobs.  FIFO never preempts and never reorders, so a
-    wide job at the queue head blocks everything behind it while slots
-    idle — exactly the utilization leak the priority policies close.
+    ``(preempt_jobs, admit_jobs)`` given the free pool and the currently
+    active jobs.  ``free`` arrives as a `PlacementPlanner` (an ``int``
+    subclass whose value is the free-slot count): built-in policies call
+    its placement API and return admits as ``(job, slots)`` pairs, while
+    custom policies may keep treating it as a bare count and returning
+    bare jobs — the server places those itself.  FIFO never preempts and
+    never reorders, so a wide job at the queue head blocks everything
+    behind it while slots idle — exactly the utilization leak the
+    priority policies close.
     """
 
     name = "fifo"
@@ -159,12 +412,17 @@ class AdmissionPolicy:
     def jobs(self) -> list:
         return list(self._queued)
 
-    def plan(self, free: int, active: list) -> tuple[list, list]:
+    def plan(self, free, active: list) -> tuple[list, list]:
+        planner = free if isinstance(free, PlacementPlanner) else None
+        n_free = int(free)
         admit = []
-        while self._queued and self._queued[0].num_slots <= free:
+        while self._queued and self._queued[0].num_slots <= n_free:
             job = self._queued.pop(0)
-            admit.append(job)
-            free -= job.num_slots
+            n_free -= job.num_slots
+            if planner is not None:
+                admit.append((job, planner.alloc(job)))
+            else:
+                admit.append(job)  # legacy bare-count call: server places
         return [], admit
 
 
@@ -332,6 +590,41 @@ class PriorityBackfillPolicy(AdmissionPolicy):
         freed = sum(k for r, k in events if r <= start)
         return start, free + freed - job.num_slots
 
+    def _reservation_placed(self, job, planner, running) -> tuple:
+        """(start, spare, d_star, spare_dev) for a blocked ``job``.
+
+        ``start``/``spare`` are the exact GLOBAL accounting of
+        `_reservation`.  When the pool spans devices and the job fits on
+        one (W <= slots-per-device), the reservation additionally pins
+        ``d_star`` — the device provably able to host the job WHOLE at
+        ``start`` (free slots now plus slots its running jobs retire by
+        then) — and ``spare_dev``, d_star's start-time surplus beyond W.
+        Condition-(b) backfill must keep that surplus intact: counting
+        freed slots only globally lets a narrow admit occupy d_star past
+        ``start`` and silently demote the wide job's single-device start
+        to a spanning one (the placement bug this method fixes).
+        """
+        start, spare = self._reservation(job, planner.total_free, running)
+        d_star = spare_dev = None
+        W = job.num_slots
+        # Per-device protection only matters when placement is affine:
+        # a flat pool ignores devices, so guarding one would change
+        # admission timing for nothing in return.
+        if (
+            planner.devices > 1
+            and planner.mode == "affine"
+            and W <= planner.cap
+        ):
+            avail = planner.free_by_device()
+            for j in running:
+                if j.total_remaining() <= start:
+                    for b in planner.slots_of(j):
+                        avail[planner.device_of(b)] += 1
+            best = max(range(planner.devices), key=lambda d: (avail[d], -d))
+            if avail[best] >= W:
+                d_star, spare_dev = best, avail[best] - W
+        return start, spare, d_star, spare_dev
+
     def _pick_victims(self, job, running: list, free: int) -> list | None:
         """Lowest-priority active jobs to evict so ``job`` fits, or None
         if even evicting every lower-priority job would not suffice."""
@@ -357,60 +650,79 @@ class PriorityBackfillPolicy(AdmissionPolicy):
                 got -= v.num_slots
         return take
 
-    def plan(self, free: int, active: list) -> tuple[list, list]:
+    def plan(self, free, active: list) -> tuple[list, list]:
+        legacy = not isinstance(free, PlacementPlanner)
+        planner = (
+            PlacementPlanner.from_counts(free, active) if legacy else free
+        )
         preempt: list = []
-        admit: list = []
+        admit: list = []  # (job, slots) pairs
         running = list(active)  # original actives + planned admissions
         originals = set(id(j) for j in active)
-        reservation = None  # (start_sweeps, spare_slots) of the blocked job
+        reservation = None  # (start, spare, d_star, spare_dev) of blocked job
         for job in self._order():
             n = job.num_slots
             if reservation is None:
-                if n <= free:
-                    admit.append(job)
+                if n <= planner.total_free:
+                    admit.append((job, planner.alloc(job)))
                     self._charge(job)
-                    free -= n
                     running.append(job)
                     continue
                 if self.preempt:
                     victims = self._pick_victims(
-                        job, [v for v in running if id(v) in originals], free
+                        job,
+                        [v for v in running if id(v) in originals],
+                        planner.total_free,
                     )
                     if victims is not None:
                         for v in victims:
                             preempt.append(v)
                             running.remove(v)
                             originals.discard(id(v))
-                            free += v.num_slots
-                        admit.append(job)
+                            planner.release_job(v)
+                        admit.append((job, planner.alloc(job)))
                         self._charge(job)
-                        free -= n
                         running.append(job)
                         continue
                 if not self.backfill:
                     break
-                reservation = self._reservation(job, free, running)
+                reservation = self._reservation_placed(job, planner, running)
                 continue
             # Backfill under the reservation: exact no-delay accounting.
-            start, spare = reservation
-            if n <= free and job.total_remaining() <= start:
-                admit.append(job)  # retires before the reserved start
+            start, spare, d_star, spare_dev = reservation
+            if n <= planner.total_free and job.total_remaining() <= start:
+                # Retires before the reserved start: its slots (wherever
+                # placed) are back by then, so it cannot erode the
+                # reservation globally OR on d_star.
+                admit.append((job, planner.alloc(job)))
                 self._charge(job)
-                free -= n
                 running.append(job)
-            elif n <= free and n <= spare:
-                admit.append(job)  # fits the slots the reserved job spares
+            elif n <= planner.total_free and n <= spare:
+                # Fits the slots the reserved job spares — but only if it
+                # also leaves d_star's start-time surplus intact, else a
+                # narrow admit would force the wide job to span devices.
+                slots = planner.alloc(job, avoid=d_star)
+                if d_star is not None:
+                    on_star = sum(
+                        1 for b in slots if planner.device_of(b) == d_star
+                    )
+                    if on_star > spare_dev:
+                        planner.putback(job)
+                        continue
+                    spare_dev -= on_star
+                admit.append((job, slots))
                 self._charge(job)
-                free -= n
-                reservation = (start, spare - n)
                 running.append(job)
-        for job in admit:
+                reservation = (start, spare - n, d_star, spare_dev)
+        for job, _ in admit:
             self._queued.remove(job)
         for job in preempt:
             # Evicted jobs go back in the queue under their ORIGINAL
             # submission seq, so they re-sort ahead of later arrivals of
             # the same priority/user and resume as soon as slots free up.
             self.enqueue(job)
+        if legacy:
+            return preempt, [job for job, _ in admit]
         return preempt, admit
 
 
@@ -540,6 +852,7 @@ class SampleServer:
         aging_sweeps: int = 0,
         wait_window: int = 256,
         mesh=None,
+        placement: str = "affine",
         telemetry: bool | Telemetry = True,
         stream: ObservableStream | None = None,
         snapshot_manager=None,
@@ -592,7 +905,6 @@ class SampleServer:
         self.chunk_sweeps = None if self._chunker else int(chunk_sweeps)
         self.policy = make_policy(policy, user_weights, aging_sweeps)
         self._active: dict[int, tuple] = {}  # jid -> (job, slots tuple)
-        self._free: list[int] = list(range(slots))
         self._next_jid = 0
         # The one metrics registry: stats(), the Prometheus/JSON exporters
         # and the Chrome trace all read it, so their numbers cannot
@@ -615,12 +927,26 @@ class SampleServer:
         self._c_completed = tel.counter("serve.jobs_completed")
         self._c_straggler = tel.counter("serve.straggler_events")
         self._h_wait = tel.histogram("serve.queue_wait_s")
+        # Placement decisions and PT swap routing (DESIGN.md §Scheduling/
+        # Placement): affine = all of a job's slots on one device;
+        # swap_local = a ladder's swap phase took the in-device fast path.
+        self._c_place_affine = tel.counter("sched.placements_affine")
+        self._c_place_span = tel.counter("sched.placements_spanning")
+        self._c_migrations = tel.counter("sched.rebalance_migrations")
+        self._c_swap_local = tel.counter("pt.swap_local")
+        self._c_swap_cross = tel.counter("pt.swap_cross")
         self.stream = stream
         # Chunk sizes already compiled (num_sweeps is a static jit arg):
         # a launch whose size is not in here pays compilation, and its
         # trace event says so (compile=True).
         self._warm_chunks: set[int] = set()
         self.devices = self.engine.mesh.shape["data"] if mesh is not None else 1
+        # The slot pool: free lists keyed by device over the mesh's
+        # contiguous [D, B/D] layout.  placement="affine" packs multi-slot
+        # jobs onto one device when possible (PT swaps stay on the
+        # in-device fast path); "flat" is the historical single-list
+        # order.  Placement never changes results, only locality.
+        self._pool = SlotPool(self.slots, devices=self.devices, mode=placement)
         self._skew = (
             LaunchSkewMonitor(self.devices) if self.devices > 1 else None
         )
@@ -765,23 +1091,35 @@ class SampleServer:
         # Refresh the policy's sweep clock first: priority aging reads it
         # to compute how long each queued job has waited.
         self.policy.clock = self.sweeps_elapsed
-        free_before = len(self._free)
-        preempts, admits = self.policy.plan(
-            free_before, [j for j, _ in self._active.values()]
+        if self._pool.mode == "affine" and self.devices > 1:
+            self._rebalance()
+        # The policy plans against a PRIVATE clone of the pool (plus the
+        # active jobs' placements); the real pool only mutates below,
+        # when the server executes the plan.
+        planner = PlacementPlanner(
+            self._pool,
+            {id(j): slots for j, slots in self._active.values()},
         )
+        free_before = planner.total_free
+        preempts, admits = self.policy.plan(
+            planner, [j for j, _ in self._active.values()]
+        )
+        # Built-in policies return (job, slots) placements; custom
+        # policies may still return bare jobs — the server places those.
+        admits = [e if isinstance(e, tuple) else (e, None) for e in admits]
         if preempts or admits:
             self.telemetry.instant(
                 "sched.plan",
                 policy=self.policy.name,
                 free=free_before,
                 queued=len(self.policy),
-                admitted=[j.jid for j in admits],
+                admitted=[j.jid for j, _ in admits],
                 preempted=[j.jid for j in preempts],
             )
         for job in preempts:
             self._park(job)
-        for job in admits:
-            self._place(job)
+        for job, slots in admits:
+            self._place(job, slots)
 
     def _park(self, job) -> None:
         """Checkpoint-preempt an active job: extract each slot's carry
@@ -792,7 +1130,7 @@ class SampleServer:
         job.parked = [self.engine.park_slot(self.carry, b) for b in taken]
         job.preemptions += 1
         self._c_preempt.add(1)
-        self._free.extend(taken)
+        self._pool.release_all(taken)  # raises on double-free
         self.telemetry.async_instant(
             "job",
             job.jid,
@@ -801,20 +1139,36 @@ class SampleServer:
             sweeps_done=job.sweeps_done,
         )
 
-    def _place(self, job) -> None:
+    def _place(self, job, placement=None) -> None:
         """Splice a job into free slots: fresh init on first admission,
-        parked-state resume after a preemption."""
-        if job.num_slots > len(self._free):
-            # Guard the public policy extension point: an over-admitting
-            # plan() must fail loudly, not truncate the job's slots (a
-            # short slots tuple would silently corrupt multi-slot jobs).
-            raise RuntimeError(
-                f"policy {self.policy.name!r} admitted job {job.jid} needing "
-                f"{job.num_slots} slots with only {len(self._free)} free"
+        parked-state resume after a preemption.  ``placement`` is the
+        policy's planned slots; ``None`` (custom policies returning bare
+        jobs) lets the server's own pool place the job."""
+        if placement is None:
+            if job.num_slots > self._pool.total_free:
+                # Guard the public policy extension point: an over-admitting
+                # plan() must fail loudly, not truncate the job's slots (a
+                # short slots tuple would silently corrupt multi-slot jobs).
+                raise RuntimeError(
+                    f"policy {self.policy.name!r} admitted job {job.jid} needing "
+                    f"{job.num_slots} slots with only {self._pool.total_free} free"
+                )
+            taken = self._pool.alloc(job.num_slots)
+        else:
+            taken = tuple(int(b) for b in placement)
+            self._pool.take(taken)  # raises if the plan double-booked a slot
+        devs = sorted({self._pool.device_of(b) for b in taken})
+        if self.devices > 1:
+            affine = len(devs) == 1
+            (self._c_place_affine if affine else self._c_place_span).add(1)
+            self.telemetry.instant(
+                "sched.placement",
+                jid=job.jid,
+                slots=list(taken),
+                devices=devs,
+                affine=affine,
+                mode=self._pool.mode,
             )
-        self._free.sort()
-        taken = tuple(self._free[: job.num_slots])
-        del self._free[: job.num_slots]
         if job.parked is not None:
             model = job.model_on(self) if self.multi_tenant else None
             for b, parked in zip(taken, job.parked):
@@ -856,6 +1210,84 @@ class SampleServer:
                 sweeps_done=job.sweeps_done,
             )
         self._active[job.jid] = (job, taken)
+
+    def _rebalance(self) -> None:
+        """Chunk-boundary defragmentation (affine mode, ``devices > 1``).
+
+        When a queued multi-slot job would fit one device (W <= B/D) and
+        fits the pool globally, but fragmentation leaves no single device
+        with W free, migrate active slots OFF the most-free device until
+        it can host the job whole.  Each migration is a park+resume pair —
+        position- and device-independent bit-exact (DESIGN.md §Recovery) —
+        so rebalancing changes placement, never results.  Invariants: the
+        total free count is unchanged (one release per alloc); migrations
+        happen only at the chunk boundary (the same safety point as
+        preemption); a migrated slot never lands back on the target
+        device (the loop stops if fragmentation leaves nowhere else).
+        """
+        pool = self._pool
+        target = None
+        for job in self.policy.jobs():
+            W = job.num_slots
+            if (
+                1 < W <= pool.cap
+                and W <= pool.total_free
+                and max(pool.free_by_device()) < W
+            ):
+                target = job
+                break
+        if target is None:
+            return
+        free_by = pool.free_by_device()
+        d_t = max(range(self.devices), key=lambda d: (free_by[d], -d))
+        need = target.num_slots - free_by[d_t]
+        if need > pool.total_free - free_by[d_t]:
+            return  # nowhere else to absorb the displaced slots
+        # Occupied slots on the target device, preferring single-slot
+        # jobs (moving one rung of a resident ladder would split it) and
+        # higher indices (displaced state re-packs lowest-first).
+        occupants = []
+        for jid, (job, slots) in self._active.items():
+            for i, b in enumerate(slots):
+                if pool.device_of(b) == d_t:
+                    occupants.append((job.num_slots != 1, -b, jid, i, b))
+        occupants.sort()
+        moved = 0
+        for _, _, jid, i, b_src in occupants:
+            if moved >= need:
+                break
+            job, slots = self._active[jid]
+            (b_dst,) = pool.alloc(1, avoid=d_t)
+            if pool.device_of(b_dst) == d_t:
+                pool.release(b_dst)  # only d_t itself had room: stop
+                break
+            parked = self.engine.park_slot(self.carry, b_src)
+            model = job.model_on(self) if self.multi_tenant else None
+            self.carry = self.engine.resume_slot(
+                self.carry, b_dst, parked, model=model
+            )
+            new_slots = list(slots)
+            new_slots[i] = b_dst
+            self._active[jid] = (job, tuple(new_slots))
+            pool.release(b_src)
+            moved += 1
+            self._c_migrations.add(1)
+            self.telemetry.async_instant(
+                "job",
+                jid,
+                phase="migrate",
+                src=int(b_src),
+                dst=int(b_dst),
+                reason=f"defrag_device_{d_t}",
+            )
+        if moved:
+            self.telemetry.instant(
+                "sched.rebalance",
+                device=d_t,
+                migrated=moved,
+                for_jid=target.jid,
+                free_by_device=pool.free_by_device(),
+            )
 
     def arm_profiler(self, logdir: str, num_chunks: int = 4) -> None:
         """Arm a `jax.profiler` trace window around the next
@@ -977,7 +1409,10 @@ class SampleServer:
                 self._admit()
             tel.gauge("serve.active_jobs").set(len(self._active))
             tel.gauge("serve.queued_jobs").set(len(self.policy))
-            tel.gauge("serve.free_slots").set(len(self._free))
+            tel.gauge("serve.free_slots").set(self._pool.total_free)
+            if self.devices > 1:
+                for d, nfree in enumerate(self._pool.free_by_device()):
+                    tel.gauge("serve.free_slots_dev", device=d).set(nfree)
             if not self._active:
                 return []
             bound = min(
@@ -1011,7 +1446,7 @@ class SampleServer:
                 self.carry = job.on_segment(self, self.carry, taken)
                 if job.done:
                     completed.append(job.finalize(self, taken))
-                    self._free.extend(taken)
+                    self._pool.release_all(taken)  # raises on double-free
                     del self._active[jid]
                     self._retired.append(jid)
                     self._c_completed.add(1)
@@ -1184,6 +1619,19 @@ class SampleServer:
             # long-lived server's alerting reads — since-start aggregates
             # dilute a fresh latency regression to invisibility.
             "queue_wait_recent": self._wait_recent_summary(),
+            # Placement health: how many admissions landed device-affine
+            # vs spanning, how often the rebalancer had to migrate, and
+            # which PT swap path ran (DESIGN.md §Scheduling/Placement).
+            "placement": {
+                "mode": self._pool.mode,
+                "devices": self.devices,
+                "free_by_device": self._pool.free_by_device(),
+                "affine": self._c_place_affine.value,
+                "spanning": self._c_place_span.value,
+                "rebalance_migrations": self._c_migrations.value,
+                "pt_swap_local": self._c_swap_local.value,
+                "pt_swap_cross": self._c_swap_cross.value,
+            },
             # Every number above reads the telemetry registry (the same
             # source the Prometheus/JSON exporters scrape); this block is
             # the registry's own health.

@@ -198,12 +198,19 @@ def snapshot_state(server) -> tuple[dict, dict]:
             "multi_tenant": server.multi_tenant,
             "wait_window": server._wait_recent.maxlen,
             "devices": server.devices,
+            "placement": server._pool.mode,
             "snapshot_every_sweeps": server.snapshot_every_sweeps,
         },
         "model": model_meta,
         "policy": _policy_state(server.policy),
         "jobs": jobs_meta,
-        "free": [int(b) for b in server._free],
+        # The free list is stored FLAT in global slot indices: the
+        # per-device keying is a pure function of (index, device count),
+        # so the restoring server rebuilds its own pool for ITS mesh —
+        # a D=4 snapshot restores onto D=1 and vice versa with placement
+        # state intact (the same slots are free; only the keying moves).
+        "free": [int(b) for b in server._pool.flat_free()],
+        "free_by_device": server._pool.free_by_device(),  # informational
         "next_jid": server._next_jid,
         "counters": {
             "launches": server.launches,
@@ -214,6 +221,11 @@ def snapshot_state(server) -> tuple[dict, dict]:
             "submitted": server._c_submitted.value,
             "completed": server._c_completed.value,
             "straggler": server._c_straggler.value,
+            "placements_affine": server._c_place_affine.value,
+            "placements_spanning": server._c_place_span.value,
+            "rebalance_migrations": server._c_migrations.value,
+            "pt_swap_local": server._c_swap_local.value,
+            "pt_swap_cross": server._c_swap_cross.value,
         },
         "launch_chunks": {
             str(k): int(v) for k, v in server.launch_chunks.items()
@@ -263,6 +275,7 @@ def restore_server(
     interpret: bool | None = None,
     replica_tile: int | None = None,
     chunk_sweeps=None,
+    placement: str | None = None,
     telemetry=True,
     stream=None,
     snapshot_manager=None,
@@ -335,6 +348,9 @@ def restore_server(
         policy=policy,
         wait_window=cfg["wait_window"],
         mesh=mesh,
+        placement=(
+            cfg.get("placement", "affine") if placement is None else placement
+        ),
         telemetry=telemetry,
         stream=stream,
         snapshot_manager=mgr if snapshot_manager is None else snapshot_manager,
@@ -390,7 +406,9 @@ def restore_server(
     server.policy._seq = pol_meta["seq"]
     server.policy.clock = pol_meta["clock"]
 
-    server._free = [int(b) for b in extra["free"]]
+    # Rebuild the free pool from the flat global list: per-device keying
+    # is recomputed for THIS server's device count (D may have changed).
+    server._pool.restore_free(extra["free"])
     server._next_jid = int(extra["next_jid"])
 
     c = extra["counters"]
@@ -402,6 +420,11 @@ def restore_server(
     server._c_submitted.add(c["submitted"])
     server._c_completed.add(c["completed"])
     server._c_straggler.add(c["straggler"])
+    server._c_place_affine.add(c.get("placements_affine", 0))
+    server._c_place_span.add(c.get("placements_spanning", 0))
+    server._c_migrations.add(c.get("rebalance_migrations", 0))
+    server._c_swap_local.add(c.get("pt_swap_local", 0))
+    server._c_swap_cross.add(c.get("pt_swap_cross", 0))
     for chunk, v in extra["launch_chunks"].items():
         server.telemetry.counter(
             "serve.launches_by_chunk", chunk=int(chunk)

@@ -1,0 +1,400 @@
+"""Placement-aware admission (DESIGN.md §Scheduling/Placement).
+
+Covers the per-device `SlotPool` (guarded free lists, affine best-fit,
+spanning fallback, flat legacy order, snapshot rekeying), the
+queue-wait downtime invariance of snapshot/restore, and — on >= 4
+devices — that placement NEVER changes results: device-affine vs flat
+vs unsharded runs are bit-identical job for job, a rebalancer migration
+across a device boundary preserves the migrated trajectory exactly, and
+a D=4 affine snapshot restores bit-exactly onto D=4 and D=1.
+
+The device-dependent tests are skip-gated on >= 4 visible devices (the
+CI leg forces them with XLA_FLAGS=--xla_force_host_platform_device_count=4);
+everything else runs on a single device.
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ising
+from repro.serve_mc import (
+    AdmissionPolicy,
+    AnnealJob,
+    PlacementPlanner,
+    PTJob,
+    SampleServer,
+    SlotPool,
+)
+
+MODEL = ising.random_layered_model(n=5, L=8, seed=1, beta=1.0)
+
+needs4 = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="placement parity needs >= 4 devices "
+    "(run with XLA_FLAGS=--xla_force_host_platform_device_count=4)",
+)
+
+
+def _final_rng(server):
+    return np.asarray(jax.device_get(server.carry.rng))
+
+
+def _assert_results_equal(got, want, what=""):
+    np.testing.assert_array_equal(got.spins, want.spins, err_msg=what)
+    np.testing.assert_array_equal(
+        np.asarray(got.energy), np.asarray(want.energy), err_msg=what
+    )
+    assert got.sweeps_done == want.sweeps_done, what
+
+
+# -----------------------------------------------------------------------------
+# SlotPool: free-list keying, guards, allocation modes.
+# -----------------------------------------------------------------------------
+
+
+def test_pool_validation():
+    with pytest.raises(ValueError, match="divide evenly"):
+        SlotPool(6, devices=4)
+    with pytest.raises(ValueError, match="affine"):
+        SlotPool(8, devices=4, mode="weird")
+    with pytest.raises(ValueError, match="devices"):
+        SlotPool(8, devices=0)
+
+
+def test_pool_double_free_and_take_guards():
+    pool = SlotPool(4, devices=2)
+    with pytest.raises(RuntimeError, match="double-free"):
+        pool.release(1)  # still free
+    pool.take((0, 1))
+    with pytest.raises(RuntimeError, match="not free"):
+        pool.take((0,))
+    pool.release(0)
+    with pytest.raises(RuntimeError, match="double-free"):
+        pool.release(0)
+    with pytest.raises(ValueError, match="outside"):
+        pool.release(9)
+
+
+def test_pool_free_lists_stay_sorted():
+    pool = SlotPool(8, devices=2)
+    pool.take((0, 1, 2, 3, 4, 5, 6, 7))
+    for b in (5, 1, 7, 0, 6):  # out-of-order releases
+        pool.release(b)
+    assert pool.flat_free() == [0, 1, 5, 6, 7]
+    assert pool.free_by_device() == [2, 3]
+
+
+def test_pool_flat_mode_is_legacy_order():
+    pool = SlotPool(8, devices=4, mode="flat")
+    assert pool.alloc(3) == (0, 1, 2)  # lowest global indices, no affinity
+    pool.release(1)
+    assert pool.alloc(2) == (1, 3)
+
+
+def test_pool_affine_best_fit_packs_one_device():
+    pool = SlotPool(8, devices=4)  # 2 slots per device
+    a = pool.alloc(2)
+    assert {pool.device_of(b) for b in a} == {0}
+    assert pool.device_of(pool.alloc(1)[0]) == 1  # leaves whole devices whole
+    c = pool.alloc(2)  # best fit: a still-whole device, not half-full dev 1
+    assert {pool.device_of(b) for b in c} == {2}
+    # 1-slot ask best-fits the FULLEST device that still fits (dev 1).
+    assert pool.device_of(pool.alloc(1)[0]) == 1
+
+
+def test_pool_spanning_fallback_under_fragmentation():
+    pool = SlotPool(8, devices=4)
+    for _ in range(8):
+        pool.alloc(1)
+    pool.release(2)  # device 1
+    pool.release(6)  # device 3
+    got = pool.alloc(2)  # no single device fits: spanning fallback
+    assert sorted(got) == [2, 6]
+    assert {pool.device_of(b) for b in got} == {1, 3}
+
+
+def test_pool_restore_free_rekeys_for_device_count():
+    p4 = SlotPool(8, devices=4)
+    p4.take((0, 1, 4, 5))
+    flat = p4.flat_free()
+    assert flat == [2, 3, 6, 7]
+    p1 = SlotPool(8, devices=1)
+    p1.take(range(8))
+    p1.restore_free(flat)  # D=4 snapshot onto a D=1 pool
+    assert p1.flat_free() == flat
+    p2 = SlotPool(8, devices=2)
+    p2.take(range(8))
+    p2.restore_free(flat)
+    assert p2.free_by_device() == [2, 2]
+
+
+def test_planner_is_int_compatible():
+    """Custom policies treating ``free`` as a count must keep working."""
+    pool = SlotPool(8, devices=4)
+    pool.take((0, 1, 2))
+    planner = PlacementPlanner(pool)
+    assert isinstance(planner, int)
+    assert int(planner) == 5 and planner - 2 == 3 and planner >= 5
+    # Planner allocations simulate against a CLONE: the pool is untouched.
+    planner.alloc(AnnealJob.constant(seed=1, sweeps=1))
+    assert pool.total_free == 5
+
+
+# -----------------------------------------------------------------------------
+# Queue-wait downtime invariance (snapshot/restore, single device).
+# -----------------------------------------------------------------------------
+
+
+def test_queue_wait_downtime_invariant(tmp_path):
+    """A job queued across a snapshot keeps the wait it ACCRUED, but the
+    process downtime between save and restore never shows up as queue
+    latency."""
+    downtime = 1.5
+    t0 = time.perf_counter()
+    srv = SampleServer(MODEL, slots=1, chunk_sweeps=4, rung="cb",
+                       backend="jnp", V=4, policy="fifo")
+    srv.submit(AnnealJob.constant(seed=1, sweeps=8, beta=1.0))
+    queued = AnnealJob.constant(seed=2, sweeps=4, beta=0.9)
+    srv.submit(queued)
+    srv.step()  # first job active, second still queued
+    accrued = time.perf_counter() - queued._submit_time
+    srv.snapshot(str(tmp_path))
+    time.sleep(downtime)
+
+    t_restore = time.perf_counter()
+    srv2 = SampleServer.restore(str(tmp_path))
+    (q2,) = [j for j in srv2.policy.jobs() if j.jid == queued.jid]
+    restored_wait = time.perf_counter() - q2._submit_time
+    # Anchored to "now - waited_s": pre-snapshot wait carries over ...
+    assert restored_wait >= accrued - 0.01
+    # ... and the sleep does NOT (only restore work may have added time).
+    assert restored_wait <= accrued + (time.perf_counter() - t_restore) + 0.25
+
+    srv2.drain()
+    w = srv2.stats()["queue_wait"]["overall"]["max_s"]
+    elapsed = time.perf_counter() - t0
+    assert w >= accrued - 0.01
+    assert w <= elapsed - downtime + 0.1  # downtime-invariant
+
+
+# -----------------------------------------------------------------------------
+# Device-affine vs flat vs unsharded: bit-identical results, fewer
+# cross-device swap phases (>= 4 devices).
+# -----------------------------------------------------------------------------
+
+
+def _pt_mix_jobs():
+    """A PT-heavy mix filling 8 slots in one round.  Under flat placement
+    both 2-rung ladders straddle a device boundary (slots (1,2) and
+    (5,6) at D=4, B=8); affine placement keeps each on one device."""
+    return [
+        AnnealJob.constant(seed=60, sweeps=5, beta=1.0),
+        PTJob(seed=61, betas=np.array([0.6, 1.2], np.float32),
+              num_rounds=3, sweeps_per_round=2),
+        AnnealJob.constant(seed=62, sweeps=3, beta=0.9),
+        AnnealJob.constant(seed=64, sweeps=9, beta=1.1),
+        PTJob(seed=63, betas=np.array([0.7, 1.1], np.float32),
+              num_rounds=4, sweeps_per_round=2),
+        AnnealJob.constant(seed=65, sweeps=7, beta=0.8),
+    ]
+
+
+def _run_mix(mesh, placement, rung="cb", backend="jnp", model=MODEL, V=4):
+    srv = SampleServer(model, slots=8, chunk_sweeps=2, rung=rung,
+                       backend=backend, V=V, mesh=mesh, placement=placement,
+                       policy="fifo")
+    jobs = _pt_mix_jobs()
+    for j in jobs:
+        srv.submit(j)
+    res = {r.jid: r for r in srv.drain()}
+    return srv, jobs, res
+
+
+@needs4
+@pytest.mark.parametrize("rung", ["a4", "cb"])
+def test_affine_vs_flat_bit_identical_jnp(rung):
+    from repro.launch.mesh import make_slot_mesh
+
+    _, jobs0, res0 = _run_mix(None, "affine", rung=rung)
+    sa, ja, ra = _run_mix(make_slot_mesh(4), "affine", rung=rung)
+    sf, jf, rf = _run_mix(make_slot_mesh(4), "flat", rung=rung)
+    for j0, a, f in zip(jobs0, ja, jf):
+        _assert_results_equal(ra[a.jid], res0[j0.jid], f"affine/{rung}")
+        _assert_results_equal(rf[f.jid], res0[j0.jid], f"flat/{rung}")
+        if isinstance(j0, PTJob):
+            for k in ("swap_accept", "swap_propose"):
+                assert (ra[a.jid].extras[k] == res0[j0.jid].extras[k]
+                        == rf[f.jid].extras[k])
+    rounds = 3 + 4
+    pa, pf = sa.stats()["placement"], sf.stats()["placement"]
+    assert pa["mode"] == "affine" and pf["mode"] == "flat"
+    assert pa["pt_swap_local"] == rounds and pa["pt_swap_cross"] == 0
+    assert pf["pt_swap_cross"] == rounds and pf["pt_swap_local"] == 0
+    assert pa["affine"] == len(ja) and pa["spanning"] == 0
+    assert pf["spanning"] >= 2  # both ladders straddled a boundary
+
+
+@needs4
+def test_affine_vs_flat_bit_identical_pallas():
+    from repro.kernels import ops
+    from repro.launch.mesh import make_slot_mesh
+
+    m = ising.random_layered_model(n=4, L=2 * ops.LANES, seed=3, beta=0.9)
+    kw = dict(rung="cb", backend="pallas", model=m, V=ops.LANES)
+    _, jobs0, res0 = _run_mix(None, "affine", **kw)
+    sa, ja, ra = _run_mix(make_slot_mesh(4), "affine", **kw)
+    sf, jf, rf = _run_mix(make_slot_mesh(4), "flat", **kw)
+    for j0, a, f in zip(jobs0, ja, jf):
+        _assert_results_equal(ra[a.jid], res0[j0.jid], "pallas/affine")
+        _assert_results_equal(rf[f.jid], res0[j0.jid], "pallas/flat")
+    assert sa.stats()["placement"]["pt_swap_cross"] == 0
+    assert sf.stats()["placement"]["pt_swap_cross"] == 7
+
+
+@needs4
+def test_wide_ladder_spans_when_only_spanning_can_admit():
+    """R=3 > slots-per-device=2: no affine placement exists, so the pool
+    must fall back to a spanning placement (and the swap phase to the
+    cross-device energy path) — and the results still match unsharded."""
+    from repro.launch.mesh import make_slot_mesh
+
+    def run(mesh):
+        srv = SampleServer(MODEL, slots=8, chunk_sweeps=2, rung="a4",
+                           backend="jnp", V=4, mesh=mesh, policy="fifo")
+        pt = PTJob(seed=70, betas=np.linspace(0.5, 1.5, 3).astype(np.float32),
+                   num_rounds=3, sweeps_per_round=2)
+        srv.submit(pt)
+        (res,) = srv.drain()
+        return srv, res
+
+    srv4, res4 = run(make_slot_mesh(4))
+    st = srv4.stats()["placement"]
+    assert st["spanning"] == 1 and st["affine"] == 0
+    assert st["pt_swap_cross"] == 3 and st["pt_swap_local"] == 0
+    _, res1 = run(None)
+    _assert_results_equal(res4, res1, "wide ladder")
+    assert res4.extras["swap_accept"] == res1.extras["swap_accept"]
+
+
+@needs4
+def test_park_rebalance_resume_across_device_boundary():
+    """Fragmented frees (one slot on each of two devices) block a 2-rung
+    ladder's affine start; the rebalancer migrates an active slot across
+    the boundary to clear a whole device.  The migrated job and the
+    ladder both still bit-equal their solo runs."""
+    from repro.launch.mesh import make_slot_mesh
+
+    srv = SampleServer(MODEL, slots=8, chunk_sweeps=2, rung="cb",
+                       backend="jnp", V=4, mesh=make_slot_mesh(4),
+                       policy="fifo")
+    # Fill all 8 slots; jobs 0 and 2 (slots 0 and 2 -> devices 0 and 1)
+    # retire first, scattering the frees across two devices.
+    sweeps = [4, 20, 4, 20, 20, 20, 20, 20]
+    jobs = [AnnealJob.constant(seed=50 + i, sweeps=s, beta=1.0)
+            for i, s in enumerate(sweeps)]
+    for j in jobs:
+        srv.submit(j)
+    done = []
+    for _ in range(2):
+        done.extend(srv.step())
+    assert {r.jid for r in done} == {jobs[0].jid, jobs[2].jid}
+    assert srv._pool.free_by_device() == [1, 1, 0, 0]
+    pt = PTJob(seed=77, betas=np.array([0.6, 1.2], np.float32),
+               num_rounds=3, sweeps_per_round=2)
+    srv.submit(pt)
+    res = {r.jid: r for r in srv.drain()}
+    st = srv.stats()["placement"]
+    assert st["rebalance_migrations"] == 1
+    assert st["pt_swap_local"] == 3 and st["pt_swap_cross"] == 0
+
+    solo = SampleServer(MODEL, slots=1, chunk_sweeps=2, rung="cb",
+                        backend="jnp", V=4, policy="fifo")
+    solo.submit(AnnealJob.constant(seed=51, sweeps=20, beta=1.0))
+    (r_mig,) = solo.drain()
+    _assert_results_equal(res[jobs[1].jid], r_mig, "migrated job")
+
+    solo_pt = SampleServer(MODEL, slots=2, chunk_sweeps=2, rung="cb",
+                           backend="jnp", V=4, policy="fifo")
+    solo_pt.submit(PTJob(seed=77, betas=np.array([0.6, 1.2], np.float32),
+                         num_rounds=3, sweeps_per_round=2))
+    (r_pt,) = solo_pt.drain()
+    _assert_results_equal(res[pt.jid], r_pt, "rebalanced ladder")
+    assert res[pt.jid].extras["swap_accept"] == r_pt.extras["swap_accept"]
+
+
+@needs4
+def test_custom_bare_job_policy_gets_server_side_affine_placement():
+    """A custom policy returning bare jobs (the legacy plan contract) on
+    a meshed server: the server places them itself, device-affine."""
+    from repro.launch.mesh import make_slot_mesh
+
+    class Greedy(AdmissionPolicy):
+        name = "greedy"
+
+        def plan(self, free, active):
+            admit, n = [], int(free)
+            while self._queued and self._queued[0].num_slots <= n:
+                job = self._queued.pop(0)
+                n -= job.num_slots
+                admit.append(job)
+            return [], admit
+
+    srv = SampleServer(MODEL, slots=8, chunk_sweeps=2, rung="cb",
+                       backend="jnp", V=4, mesh=make_slot_mesh(4),
+                       policy=Greedy())
+    srv.submit(AnnealJob.constant(seed=80, sweeps=4, beta=1.0))
+    srv.submit(PTJob(seed=81, betas=np.array([0.6, 1.2], np.float32),
+                     num_rounds=2, sweeps_per_round=2))
+    srv.drain()
+    st = srv.stats()["placement"]
+    assert st["affine"] == 2 and st["spanning"] == 0
+    assert st["pt_swap_local"] == 2 and st["pt_swap_cross"] == 0
+
+
+# -----------------------------------------------------------------------------
+# Snapshot/restore carries placement state: D=4 -> D=4 and D=4 -> D=1.
+# -----------------------------------------------------------------------------
+
+
+@needs4
+@pytest.mark.parametrize("d_restore", [4, 1])
+def test_affine_snapshot_restores_bitexact(tmp_path, d_restore):
+    from repro.launch.mesh import make_slot_mesh
+
+    def build(mesh, snap=None):
+        srv = SampleServer(MODEL, slots=8, chunk_sweeps=2, rung="cb",
+                           backend="jnp", V=4, mesh=mesh, placement="affine",
+                           policy="fifo", snapshot_manager=snap)
+        for j in _pt_mix_jobs():
+            srv.submit(j)
+        return srv
+
+    ref = build(make_slot_mesh(4))
+    ref_results = {r.jid: r for r in ref.drain()}
+    ref_order = list(ref._retired)
+    ref_rng = _final_rng(ref)
+
+    srv = build(make_slot_mesh(4), snap=str(tmp_path))
+    pre = []
+    for _ in range(3):
+        pre.extend(srv.step())
+    srv.snapshot()
+    del srv
+
+    mesh2 = make_slot_mesh(4) if d_restore == 4 else None
+    srv2 = SampleServer.restore(str(tmp_path), mesh=mesh2)
+    assert srv2.devices == d_restore
+    assert srv2._pool.mode == "affine"
+    post = srv2.drain()
+    combined = {r.jid: r for r in pre + post}
+    assert set(combined) == set(ref_results)
+    for jid, r in combined.items():
+        _assert_results_equal(r, ref_results[jid], f"restore D{d_restore}")
+    # All placement decisions happened before the snapshot, so the slot
+    # assignment — and with it the whole pool's final state, idle
+    # resweeps included — carries to EITHER device count.
+    assert list(srv2._retired) == ref_order
+    np.testing.assert_array_equal(_final_rng(srv2), ref_rng)
