@@ -111,6 +111,13 @@ THRESHOLDS = (
     # so the gate is exact: any cross-device swap under affine trips it.
     dict(bench="serve", record="serve_placement_D4", metric="cross_swap_ratio",
          min_ratio=0.95, direction="lower"),
+    # Heterogeneous mesh: an uneven [4,2,1,1] capacity vector must keep
+    # the same sweep-clock throughput as a single device at the same
+    # global slot count.  jobs_per_sweep is pure admission arithmetic
+    # (the bench also asserts bit-identical job results), deterministic
+    # on any machine, so the gate is tight.
+    dict(bench="serve", record="serve_hetero_mesh", metric="jobs_per_sweep_vs_D1",
+         min_ratio=0.95),
     # Colored sweeps must keep their lead over the sequential rung.
     dict(bench="kernel", record="kernel_cb_jnp_paper_B8", metric="speedup_vs_a4",
          min_ratio=0.5),

@@ -31,6 +31,14 @@ The serving claim of DESIGN.md §Service, measured three ways:
   ladders — affine must execute strictly fewer cross-device swap
   gathers with BIT-IDENTICAL per-job results (ISSUE 9 acceptance); the
   deterministic ``cross_swap_ratio`` is gated by check_regression.
+* heterogeneous mesh (cb rung, D=4 forced host devices): the same job
+  mix — including a 6-replica PT ladder wider than any single device —
+  on an UNEVEN ``capacities=[4,2,1,1]`` slot pool vs the single-device
+  engine with the same 8 global slots (ISSUE 10 acceptance): per-job
+  results must hash identically, the ladder must actually span devices,
+  and the deterministic ``jobs_per_sweep_vs_D1`` ratio (gated by
+  check_regression) must stay at 1.0 — an uneven vector is pure layout
+  and must not perturb admission timing.
 * telemetry overhead (cb rung): the same mix with the full observability
   event pipeline on vs telemetry off, interleaved rounds — measures the
   DESIGN.md §Observability <= 5% overhead claim as ``overhead_ratio``
@@ -550,6 +558,167 @@ def _placement_section(rows, records):
     )
 
 
+_HETERO_MARK = "HETERO_RESULT "
+# Heterogeneous mesh section: D=4 forced devices with an UNEVEN capacity
+# vector (one big host-like device, one medium, two small) over the same
+# 8 global slots as the single-device reference.  The mix includes a
+# 6-replica PT ladder wider than any device's capacity, so it MUST span
+# devices on the ragged pool — exercising the cross-device swap path and
+# ragged park/resume, not just the happy affine case.
+HETERO_CAPACITIES = (4, 2, 1, 1)
+HETERO_NUM_ROUNDS = 6
+
+
+def _hetero_jobs():
+    """Deterministic mix over 8 slots: wide spanning ladder + anneals."""
+    jobs = [PTJob(seed=4000, betas=np.linspace(0.5, 1.5, 6).astype(np.float32),
+                  num_rounds=HETERO_NUM_ROUNDS, sweeps_per_round=CHUNK)]
+    for i in range(8):
+        jobs.append(AnnealJob.constant(
+            seed=4100 + i, sweeps=(2 + (i % 4)) * CHUNK,
+            beta=0.6 + 0.1 * i))
+    jobs.append(PTJob(seed=4200, betas=[0.7, 1.1],
+                      num_rounds=4, sweeps_per_round=CHUNK))
+    return jobs
+
+
+def _hetero_worker(layout: str) -> None:
+    """Child-process body: serve the hetero mix under one layout
+    ("hetero" = D=4 mesh with capacities [4,2,1,1]; "d1" = single
+    device, same 8 global slots) and print one tagged JSON line."""
+    import jax
+
+    from repro.launch.mesh import make_slot_mesh
+
+    m = ising.random_layered_model(n=MODEL_N, L=SHARDED_MODEL_L, seed=0,
+                                   beta=1.0)
+    kw = {}
+    if layout == "hetero":
+        d = len(HETERO_CAPACITIES)
+        if len(jax.devices()) < d:
+            raise SystemExit(
+                f"hetero worker: need {d} devices, see {len(jax.devices())} "
+                "(XLA_FLAGS not applied?)"
+            )
+        kw = dict(mesh=make_slot_mesh(d), capacities=HETERO_CAPACITIES)
+    srv = SampleServer(
+        m, slots=sum(HETERO_CAPACITIES), chunk_sweeps=CHUNK, backend="jnp",
+        V=V, rung="cb", telemetry=False, policy="backfill", **kw,
+    )
+    # Warmup pays jit for run(chunk) + splice/extract outside the timing.
+    srv.submit(AnnealJob.constant(seed=1, sweeps=CHUNK, beta=1.0))
+    srv.drain()
+    spanning0 = srv._c_place_span.value
+    best = None
+    for _ in range(REPEATS):
+        jobs = _hetero_jobs()
+        sweeps0 = srv.stats()["sweeps_elapsed"]
+        t0 = time.perf_counter()
+        for j in jobs:
+            srv.submit(j)
+        by_jid = {r.jid: r for r in srv.drain()}
+        dt = time.perf_counter() - t0
+        sweeps = srv.stats()["sweeps_elapsed"] - sweeps0
+        h = hashlib.sha256()
+        for j in jobs:
+            r = by_jid[j.jid]
+            h.update(np.ascontiguousarray(r.spins).tobytes())
+            h.update(np.asarray(r.energy, np.float64).tobytes())
+        out = {
+            "layout": layout,
+            "slots": sum(HETERO_CAPACITIES),
+            "num_jobs": len(jobs),
+            "wall_s": dt,
+            "sweeps_elapsed": int(sweeps),
+            # jobs per global sweep: pure sweep-clock scheduling metric,
+            # deterministic on any box (same reasoning as _sharded_section)
+            "jobs_per_sweep": len(jobs) / sweeps,
+            "jobs_per_sec": len(jobs) / dt,
+            "spanning_placements": srv._c_place_span.value - spanning0,
+            "spins_sha256": h.hexdigest(),
+        }
+        if best is None or dt < best["wall_s"]:
+            best = out
+    print(_HETERO_MARK + json.dumps(best))
+
+
+def _spawn_hetero_worker(layout: str) -> dict:
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if "xla_force_host_platform_device_count" not in f]
+    d = len(HETERO_CAPACITIES) if layout == "hetero" else 1
+    flags.append(f"--xla_force_host_platform_device_count={d}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serve_bench", "--hetero-worker",
+         layout],
+        env=env, cwd=REPO_ROOT, capture_output=True, text=True,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"hetero worker layout={layout} failed "
+            f"(rc={proc.returncode}):\n{proc.stdout}\n{proc.stderr}"
+        )
+    lines = [ln for ln in proc.stdout.splitlines()
+             if ln.startswith(_HETERO_MARK)]
+    if not lines:
+        raise RuntimeError(
+            f"hetero worker layout={layout}: no result line\n{proc.stdout}")
+    return json.loads(lines[-1][len(_HETERO_MARK):])
+
+
+def _hetero_mesh_section(rows, records):
+    """Uneven [4,2,1,1] mesh vs the single-device engine, same 8 slots.
+
+    The ISSUE 10 acceptance in bench form: a heterogeneous capacity
+    vector is pure layout — per-job results are BIT-IDENTICAL to D=1
+    (asserted via sha256, including the 6-replica ladder that must span
+    devices on the ragged pool), and the sweep-clock drain schedule is
+    unchanged (admission sees the same 8 global slots), so the gated
+    ``jobs_per_sweep_vs_D1`` is deterministically 1.0 — any dip means
+    the ragged layout perturbed admission timing.
+    """
+    het = _spawn_hetero_worker("hetero")
+    ref = _spawn_hetero_worker("d1")
+    if het["spins_sha256"] != ref["spins_sha256"]:
+        raise AssertionError(
+            "hetero-mesh acceptance: [4,2,1,1] per-job results differ from "
+            "the single-device engine (capacities must not change WHAT)"
+        )
+    if het["spanning_placements"] < 1:
+        raise AssertionError(
+            "hetero-mesh bench: the wide ladder never spanned devices — "
+            "the mix no longer exercises the ragged spanning path"
+        )
+    ratio = het["jobs_per_sweep"] / ref["jobs_per_sweep"]
+    rec = {
+        "name": "serve_hetero_mesh",
+        "B": het["slots"],
+        "rung": "cb",
+        "devices": len(HETERO_CAPACITIES),
+        "capacities": list(HETERO_CAPACITIES),
+        "num_jobs": het["num_jobs"],
+        "wall_clock_s": het["wall_s"],
+        "sweeps_per_sec": het["sweeps_elapsed"] / het["wall_s"],
+        "jobs_per_sec": het["jobs_per_sec"],
+        "jobs_per_sec_D1": ref["jobs_per_sec"],
+        "sweeps_elapsed": het["sweeps_elapsed"],
+        "sweeps_elapsed_D1": ref["sweeps_elapsed"],
+        "jobs_per_sweep": het["jobs_per_sweep"],
+        "jobs_per_sweep_vs_D1": ratio,
+        "spanning_placements": het["spanning_placements"],
+        "bit_identical_to_D1": True,
+    }
+    records.append(rec)
+    rows.append(
+        ("serve_hetero_mesh_jobs_per_sweep", het["jobs_per_sweep"] * 1e6,
+         f"{het['num_jobs']} jobs in {het['sweeps_elapsed']} sweeps on "
+         f"capacities {list(HETERO_CAPACITIES)} "
+         f"({ratio:.2f}x the D=1 sweep clock, "
+         f"{het['spanning_placements']} spanning placements, bit-identical)")
+    )
+
+
 def _telemetry_overhead_section(m, specs, rows, records):
     """Telemetry-on vs telemetry-off jobs/sec on the cb serving path.
 
@@ -975,6 +1144,11 @@ def run():
     # results bit-identical; cross_swap_ratio gated by check_regression).
     _placement_section(rows, records)
 
+    # Heterogeneous mesh: uneven [4,2,1,1] capacities vs D=1, same global
+    # slots (ISSUE 10 acceptance: bit-identical results incl. a spanning
+    # ladder; jobs_per_sweep_vs_D1 gated by check_regression).
+    _hetero_mesh_section(rows, records)
+
     path = write_bench_json("serve", records)
     rows.append(("serve_bench_json", 0.0, path))
     return rows
@@ -985,6 +1159,8 @@ if __name__ == "__main__":
         _sharded_worker(int(sys.argv[2]))
     elif len(sys.argv) > 2 and sys.argv[1] == "--placement-worker":
         _placement_worker(sys.argv[2])
+    elif len(sys.argv) > 2 and sys.argv[1] == "--hetero-worker":
+        _hetero_worker(sys.argv[2])
     else:
         for r in run():
             print(",".join(str(x) for x in r))

@@ -57,17 +57,31 @@ in one persistent ``jax.jit`` (num_sweeps static), so repeated `run` calls
 hit the compile cache — the steady-state benchmarking contract that
 `metropolis.make_sweeper` used to provide.
 
-MESH-SHARDED engines (``build(..., mesh=...)`` / ``build_multi(...,
-mesh=...)``) extend the same layout story one level up (DESIGN.md §Mesh):
-the batch axis of the carry — spins, fields, betas, RNG state columns —
-and the per-slot coupling tables shard over a 1-D ``("data",)`` mesh, and
-`run` becomes one `shard_map` whose per-device body is the UNMODIFIED
-single-device builder at ``batch = B/D``.  Slots are independent (separate
-carry rows, separate MT19937 lane columns), so the sweep hot path has
-zero cross-device traffic and sharded-vs-single-device execution is
-bit-exact (tests/test_sharded.py).  Slot APIs keep addressing GLOBAL slot
-indices — GSPMD resolves the (device, local slot) placement — so the
-serving layer works unmodified over the enlarged pool.
+MESH-SHARDED engines (``create(..., mesh=...)``) extend the same layout
+story one level up (DESIGN.md §Mesh): the batch axis of the carry —
+spins, fields, betas, RNG state columns — and the per-slot coupling
+tables shard over a 1-D ``("data",)`` mesh, and `run` becomes one
+`shard_map` whose per-device body is the UNMODIFIED single-device builder
+at the per-device batch.  Slots are independent (separate carry rows,
+separate MT19937 lane columns), so the sweep hot path has zero
+cross-device traffic and sharded-vs-single-device execution is bit-exact
+(tests/test_sharded.py).  Slot APIs keep addressing GLOBAL slot indices —
+GSPMD resolves the (device, local slot) placement — so the serving layer
+works unmodified over the enlarged pool.
+
+HETEROGENEOUS meshes (``create(..., mesh=..., capacities=[4, 2, 1, 1])``)
+drop the equal-split requirement: device d owns ``capacities[d]`` slots
+and global slot ``b`` maps to its (device, local slot) through a
+prefix-sum lookup instead of integer division.  Physically the carry is
+laid out as PADDED ``[D, B_max]`` blocks (``B_max = max(capacities)``):
+every device sweeps B_max rows so the per-device body — and therefore
+every compiled kernel — is the unmodified homogeneous one, and the
+``D * B_max - B`` padding rows are ordinary idle slots that no API ever
+addresses (logical slot indices ``0..B-1`` translate through
+`phys_slots`; `extract_pool` stores logical rows only, which is what lets
+a snapshot taken under one capacity vector restore onto any other).
+Equal capacity vectors have no padding — physical == logical — so they
+reproduce the homogeneous path bit for bit and code path for code path.
 """
 
 from __future__ import annotations
@@ -75,6 +89,7 @@ from __future__ import annotations
 from typing import Callable, NamedTuple
 
 import copy
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -149,6 +164,88 @@ class ParkedSlot(NamedTuple):
     tables: dict | None
 
 
+class SlotHandle:
+    """All per-slot operations on one logical slot, behind one object
+    (`engine.slot(b)`).
+
+    The engine historically exposed the slot lifecycle as parallel call
+    families — `extract_slot`/`splice_slot` for the carry row,
+    `extract_slot_tables`/`splice_slot_tables` for the multi-tenant
+    coupling row, `park_slot`/`resume_slot` stitching both — and every
+    caller (scheduler preemption, snapshot restore) had to thread the
+    pairs in lockstep.  A handle closes over (engine, logical index) and
+    does the stitching itself: `extract()` always returns a complete
+    `ParkedSlot` (tables included when the engine is multi-tenant),
+    `splice()` accepts either a `ParkedSlot` or a bare single-slot
+    carry.  `park`/`resume` are the same operations under the
+    scheduler's names.  Handles are cheap value objects — create them
+    on the fly, never cache across engines.
+    """
+
+    __slots__ = ("engine", "index")
+
+    def __init__(self, engine: "SweepEngine", index: int):
+        self.engine = engine
+        self.index = index
+
+    def __repr__(self) -> str:
+        return f"SlotHandle(b={self.index}, device={self.device})"
+
+    @property
+    def device(self) -> int:
+        """Mesh device owning this slot (0 when unsharded)."""
+        return self.engine.slot_device(self.index)
+
+    def extract(self, carry: SweepCarry) -> ParkedSlot:
+        """This slot's complete resumable state (carry row + coupling
+        row on multi-tenant engines).  Pure read."""
+        eng, b = self.engine, self.index
+        tables = eng.extract_slot_tables(b) if eng.multi else None
+        return ParkedSlot(eng.extract_slot(carry, b), tables)
+
+    def splice(
+        self,
+        carry: SweepCarry,
+        state,
+        model: "ising.LayeredModel | None" = None,
+    ) -> SweepCarry:
+        """Write ``state`` — a `ParkedSlot` or a bare single-slot
+        `SweepCarry` — into this slot; returns the updated carry.
+
+        A `ParkedSlot` with tables splices them too; ``model`` (multi-
+        tenant, optional) records the tables' provenance so later
+        `set_slot_model` calls for the same tenant can no-op.  A bare
+        carry with ``model`` set installs that model's tables first
+        (fresh-admission shape: `set_slot_model` + carry splice).
+        """
+        eng, b = self.engine, self.index
+        if isinstance(state, ParkedSlot):
+            if eng.multi and state.tables is not None:
+                eng.splice_slot_tables(b, state.tables)
+                if model is not None:
+                    check_same_topology(eng.model, model)
+                    eng.models = (
+                        eng.models[:b] + (model,) + eng.models[b + 1 :]
+                    )
+            return eng.splice_slot(carry, b, state.carry)
+        if model is not None:
+            eng.set_slot_model(b, model)
+        return eng.splice_slot(carry, b, state)
+
+    def park(self, carry: SweepCarry) -> ParkedSlot:
+        """`extract` under the scheduler's preemption name."""
+        return self.extract(carry)
+
+    def resume(
+        self,
+        carry: SweepCarry,
+        parked: ParkedSlot,
+        model: "ising.LayeredModel | None" = None,
+    ) -> SweepCarry:
+        """`splice` under the scheduler's preemption name."""
+        return self.splice(carry, parked, model=model)
+
+
 def lane_seeds(batch: int, V: int, seed: int) -> np.ndarray:
     """Per-lane MT19937 seeds for `batch` replicas of `V` interlaced lanes.
 
@@ -159,6 +256,40 @@ def lane_seeds(batch: int, V: int, seed: int) -> np.ndarray:
     return (
         np.arange(batch * V, dtype=np.uint32) * LANE_SEED_MULT + np.uint32(seed)
     )
+
+
+def normalize_capacities(devices: int, batch: int, capacities=None) -> tuple[int, ...]:
+    """Validate a per-device slot capacity vector (or synthesize the equal
+    split when ``capacities`` is None).
+
+    The contract shared by the engine's ragged carry layout and the
+    scheduler's `SlotPool`: ``len == devices``, every entry a non-negative
+    int (zero-capacity devices are legal — a host CPU in an accelerator
+    mesh may contribute no slots), at least one entry positive, and the
+    sum equal to the LOGICAL batch.  The equal split requires
+    ``batch % devices == 0``, preserving the homogeneous-mesh validation.
+    """
+    if capacities is None:
+        if batch % devices != 0:
+            raise ValueError(
+                f"batch {batch} must divide evenly over {devices} devices "
+                "(pass capacities=[...] for an uneven split)"
+            )
+        return (batch // devices,) * devices
+    caps = tuple(int(c) for c in capacities)
+    if len(caps) != devices:
+        raise ValueError(
+            f"capacities has {len(caps)} entries for {devices} devices"
+        )
+    if any(c < 0 for c in caps):
+        raise ValueError(f"capacities must be >= 0, got {caps}")
+    if not any(caps):
+        raise ValueError("at least one device needs capacity > 0")
+    if sum(caps) != batch:
+        raise ValueError(
+            f"capacities sum {sum(caps)} != batch {batch}"
+        )
+    return caps
 
 
 # -----------------------------------------------------------------------------
@@ -253,11 +384,12 @@ class SweepEngine:
         models: tuple | None = None,
         slot_tables: dict | None = None,
         mesh: Mesh | None = None,
+        capacities=None,
     ):
         self.model = model
         self.rung = rung
         self.backend = backend
-        self.batch = batch
+        self.batch = batch  # LOGICAL slot count — what every public API sees
         self.V = V
         self.exp_flavor = exp_flavor
         self.interpret = interpret
@@ -265,13 +397,47 @@ class SweepEngine:
         self.replica_tile = replica_tile
         self.rows = tables.get("rows")  # lane rungs only
         self.mesh = mesh
+        if mesh is None and capacities is not None:
+            raise ValueError("capacities need a mesh-sharded engine (mesh=...)")
+        # Ragged-capacity layout (DESIGN.md §Mesh/Heterogeneous): on a mesh
+        # with per-device capacities the carry is laid out as padded
+        # [D, B_max] physical blocks; logical slot b lives at physical row
+        # _phys_index[b] and its device comes from the capacity prefix
+        # sums.  Equal capacities (or no mesh) make physical == logical and
+        # every translation below the identity — the homogeneous bit-exact
+        # path, unchanged.
         if mesh is not None:
-            self._validate_mesh(mesh, batch, replica_tile)
-        # Multi-tenant state (`build_multi`): per-slot models and their
-        # batched coupling tables, fed to the run jit as ARGUMENTS so one
-        # executable serves any model mix sharing the engine's topology.
+            self.capacities = self._validate_mesh(
+                mesh, batch, replica_tile, capacities
+            )
+            D = mesh.shape["data"]
+            b_max = max(self.capacities)
+            self._cum = np.concatenate(
+                [[0], np.cumsum(self.capacities)]
+            ).astype(np.int64)
+            self._phys_index = np.concatenate(
+                [
+                    d * b_max + np.arange(c, dtype=np.int64)
+                    for d, c in enumerate(self.capacities)
+                ]
+            )
+            self._phys_batch = D * b_max
+        else:
+            self.capacities = None
+            self._cum = None
+            self._phys_index = np.arange(batch, dtype=np.int64)
+            self._phys_batch = batch
+        self._ragged = self._phys_batch != self.batch
+        self._pad_state = None  # lazy deterministic padding-row template
+        # Multi-tenant state (`create` with a model list): per-slot models
+        # and their batched coupling tables, fed to the run jit as
+        # ARGUMENTS so one executable serves any model mix sharing the
+        # engine's topology.  ``models`` stays LOGICAL length; the tables
+        # are physical (padding rows carry the base model's couplings).
         self.multi = models is not None
         self.models = models
+        if self._ragged and slot_tables is not None:
+            slot_tables = self._expand_tables(slot_tables)
         self.slot_tables = slot_tables
         if mesh is not None and slot_tables is not None:
             self.slot_tables = jax.device_put(slot_tables, self._table_shardings())
@@ -299,6 +465,58 @@ class SweepEngine:
     # -- construction ---------------------------------------------------------
 
     @classmethod
+    def create(
+        cls,
+        models,
+        rung: str = "a4",
+        backend: str = "jnp",
+        *,
+        batch: int | None = None,
+        V: int = 4,
+        exp_flavor: str | None = None,
+        interpret: bool | None = None,
+        replica_tile: int | None = None,
+        mesh: Mesh | None = None,
+        capacities=None,
+    ) -> "SweepEngine":
+        """THE constructor: one entry point for every engine flavour.
+
+        ``models`` is either a single `LayeredModel` (single-model engine;
+        ``batch`` replica slots, default 1) or a sequence of models (one
+        slot per entry, multi-tenant — per-slot coupling tables ride as
+        batched kernel inputs; ``batch`` must be omitted or equal the
+        list length).  ``replica_tile`` (pallas only) sizes the kernel's
+        resident replica group to VMEM — must divide the per-device
+        batch; None = all of it.  ``mesh`` (a 1-D ``("data",)`` mesh,
+        e.g. `launch.mesh.make_slot_mesh`) shards the batch axis over its
+        D devices — ``batch`` stays the GLOBAL slot count.  ``capacities``
+        (mesh engines only) is the per-device slot capacity vector for a
+        heterogeneous mesh: length D, summing to ``batch``; None keeps
+        the equal split (which then must divide evenly).
+
+        The deprecated `build`/`build_multi` classmethods are thin
+        bit-exact shims over this path.
+        """
+        if isinstance(models, ising.LayeredModel):
+            return cls._create_single(
+                models, rung, backend,
+                batch=1 if batch is None else batch,
+                V=V, exp_flavor=exp_flavor, interpret=interpret,
+                replica_tile=replica_tile, mesh=mesh, capacities=capacities,
+            )
+        models = tuple(models)
+        if batch is not None and batch != len(models):
+            raise ValueError(
+                f"batch {batch} != len(models) {len(models)} — multi-tenant "
+                "engines have exactly one slot per model"
+            )
+        return cls._create_multi(
+            models, rung, backend, V=V, exp_flavor=exp_flavor,
+            interpret=interpret, replica_tile=replica_tile, mesh=mesh,
+            capacities=capacities,
+        )
+
+    @classmethod
     def build(
         cls,
         model: ising.LayeredModel,
@@ -311,12 +529,35 @@ class SweepEngine:
         interpret: bool | None = None,
         replica_tile: int | None = None,
         mesh: Mesh | None = None,
+        capacities=None,
     ) -> "SweepEngine":
-        """``replica_tile`` (pallas only) sizes the kernel's resident
-        replica group to VMEM — must divide ``batch``; None = all of it.
-        ``mesh`` (a 1-D ``("data",)`` mesh, e.g. `launch.mesh.make_slot_mesh`)
-        shards the batch axis over its D devices — ``batch`` stays the
-        GLOBAL slot count and must divide by D."""
+        """DEPRECATED — use `SweepEngine.create` (bit-exact shim)."""
+        warnings.warn(
+            "SweepEngine.build is deprecated; use SweepEngine.create",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return cls._create_single(
+            model, rung, backend, batch=batch, V=V, exp_flavor=exp_flavor,
+            interpret=interpret, replica_tile=replica_tile, mesh=mesh,
+            capacities=capacities,
+        )
+
+    @classmethod
+    def _create_single(
+        cls,
+        model: ising.LayeredModel,
+        rung: str,
+        backend: str,
+        *,
+        batch: int,
+        V: int,
+        exp_flavor: str | None,
+        interpret: bool | None,
+        replica_tile: int | None,
+        mesh: Mesh | None,
+        capacities=None,
+    ) -> "SweepEngine":
         if rung not in RUNGS:
             raise ValueError(f"unknown rung {rung!r}; choose from {RUNGS}")
         if backend not in _BACKENDS:
@@ -344,7 +585,7 @@ class SweepEngine:
         cls._validate_backend_opts(rung, backend, V, batch, replica_tile)
         return cls(
             model, rung, backend, batch, V, exp_flavor, interpret, tables,
-            replica_tile, mesh=mesh,
+            replica_tile, mesh=mesh, capacities=capacities,
         )
 
     @staticmethod
@@ -403,7 +644,9 @@ class SweepEngine:
     # execution is bit-exact with the D=1 engine by construction.
 
     @staticmethod
-    def _validate_mesh(mesh: Mesh, batch: int, replica_tile: int | None) -> None:
+    def _validate_mesh(
+        mesh: Mesh, batch: int, replica_tile: int | None, capacities=None
+    ) -> tuple[int, ...]:
         if "data" not in mesh.shape:
             raise ValueError(
                 f'engine meshes need a "data" axis; got {dict(mesh.shape)}'
@@ -415,24 +658,25 @@ class SweepEngine:
                 f"non-trivial axes {extra}"
             )
         D = mesh.shape["data"]
-        if batch % D != 0:
-            raise ValueError(
-                f"batch {batch} must divide evenly over {D} devices"
-            )
-        if replica_tile is not None and (batch // D) % replica_tile != 0:
+        caps = normalize_capacities(D, batch, capacities)
+        b_max = max(caps)
+        if replica_tile is not None and b_max % replica_tile != 0:
             raise ValueError(
                 f"replica_tile {replica_tile} must divide the per-device "
-                f"batch {batch // D}"
+                f"batch {b_max}"
             )
+        return caps
 
     def _local_view(self) -> "SweepEngine":
         """A shallow copy with the PER-DEVICE batch.  Backend builders
         close over ``eng.batch`` (uniform reshapes, kernel grids); under
         `shard_map` the body sees local shards, so it must be built for
-        ``B/D`` slots.  Everything else (model, tables, rung, flavor) is
-        shared by reference — the builders treat them as read-only."""
+        the per-device block — ``B/D`` rows, or ``B_max`` padded rows on a
+        ragged-capacity mesh.  Everything else (model, tables, rung,
+        flavor) is shared by reference — the builders treat them as
+        read-only."""
         loc = copy.copy(self)
-        loc.batch = self.batch // self.mesh.shape["data"]
+        loc.batch = self._phys_batch // self.mesh.shape["data"]
         loc.mesh = None
         return loc
 
@@ -579,8 +823,15 @@ class SweepEngine:
                 )
             self._energies_jit = jax.jit(fn)
         if self.multi:
-            return self._energies_jit(carry.spins, self.slot_tables)
-        return self._energies_jit(carry.spins)
+            e = self._energies_jit(carry.spins, self.slot_tables)
+        else:
+            e = self._energies_jit(carry.spins)
+        if self._ragged:
+            # Logical (B,) view: drop the padding rows so callers index by
+            # logical slot.  A gather of B scalars, off the sweep hot path
+            # (only swap phases read energies).
+            e = e[jnp.asarray(self._phys_index)]
+        return e
 
     @classmethod
     def build_multi(
@@ -594,6 +845,33 @@ class SweepEngine:
         interpret: bool | None = None,
         replica_tile: int | None = None,
         mesh: Mesh | None = None,
+        capacities=None,
+    ) -> "SweepEngine":
+        """DEPRECATED — use `SweepEngine.create` (bit-exact shim)."""
+        warnings.warn(
+            "SweepEngine.build_multi is deprecated; use SweepEngine.create",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return cls._create_multi(
+            tuple(models), rung, backend, V=V, exp_flavor=exp_flavor,
+            interpret=interpret, replica_tile=replica_tile, mesh=mesh,
+            capacities=capacities,
+        )
+
+    @classmethod
+    def _create_multi(
+        cls,
+        models: tuple,
+        rung: str,
+        backend: str,
+        *,
+        V: int,
+        exp_flavor: str | None,
+        interpret: bool | None,
+        replica_tile: int | None,
+        mesh: Mesh | None,
+        capacities=None,
     ) -> "SweepEngine":
         """A MULTI-TENANT engine: one slot per entry of ``models``, each
         slot sweeping its own model's couplings/fields in the same fused
@@ -609,7 +887,6 @@ class SweepEngine:
         (tests/test_multi_tenant.py), which is what lets the serving layer
         switch to it unconditionally.
         """
-        models = tuple(models)
         if not models:
             raise ValueError("build_multi needs at least one model")
         base = models[0]
@@ -635,6 +912,7 @@ class SweepEngine:
         return cls(
             base, rung, backend, batch, V, exp_flavor, interpret, tables,
             replica_tile, models=models, slot_tables=slot_tables, mesh=mesh,
+            capacities=capacities,
         )
 
     # -- lifecycle ------------------------------------------------------------
@@ -696,6 +974,10 @@ class SweepEngine:
             rng = mt.mt_init(lane_seeds(B, self.V, seed))
         stacked = [jnp.stack([s[i] for s in states]) for i in range(3)]
         carry = SweepCarry(*stacked, betas=betas, rng=rng)
+        if self._ragged:
+            carry = SweepCarry(
+                *(jnp.asarray(x) for x in self._expand_carry(carry))
+            )
         if self.mesh is not None:
             carry = jax.device_put(carry, self._carry_shardings())
         return carry
@@ -732,21 +1014,28 @@ class SweepEngine:
     # -- views ----------------------------------------------------------------
 
     def spins_flat(self, carry: SweepCarry) -> np.ndarray:
-        """(B, N) spins in flat layer-major order, comparable across rungs."""
+        """(B, N) spins in flat layer-major order, comparable across rungs.
+
+        Always LOGICAL rows: on a ragged engine the padding rows of a
+        full-pool carry are dropped, so consumers (observable streams,
+        result finalization) index by logical slot on every layout.
+        Single-slot carries (from `extract_slot`) pass through unchanged.
+        """
         m = self.model
+        spins = np.asarray(carry.spins)
+        if self._ragged and spins.shape[0] == self._phys_batch:
+            spins = spins[self._phys_index]
         if self.rung in FLAT_RUNGS:
-            return np.asarray(carry.spins)
+            return spins
         return np.stack(
-            [
-                reorder.from_lane(np.asarray(s), m.n, m.L, self.V)
-                for s in carry.spins
-            ]
+            [reorder.from_lane(s, m.n, m.L, self.V) for s in spins]
         )
 
     def state_of(self, carry: SweepCarry, b: int = 0):
         """Replica ``b`` as the historical per-replica NamedTuple."""
         cls = metropolis.FlatState if self.rung in FLAT_RUNGS else metropolis.LaneState
-        return cls(carry.spins[b], carry.h_space[b], carry.h_tau[b])
+        pb = self._slot_phys(b)
+        return cls(carry.spins[pb], carry.h_space[pb], carry.h_tau[pb])
 
     # -- per-slot splice/extract (the serve scheduler's admit/retire API) ------
     #
@@ -765,17 +1054,35 @@ class SweepEngine:
         return self.V if self.rung in LANE_RUNGS else 1
 
     def slot_device(self, b: int) -> int:
-        """Device owning global slot ``b`` (0 when unsharded).
+        """Device owning logical slot ``b`` (0 when unsharded).
 
-        The mesh shards the batch axis as contiguous ``[D, B/D]`` blocks
+        The mesh shards the batch axis as contiguous per-device blocks
         (`_carry_pspecs`), so ownership is a pure function of the index —
         the fact the scheduler's placement-aware admission builds on: a
         job whose slots share a device keeps its collective phases (PT
-        swaps) on-device instead of paying a cross-device gather.
+        swaps) on-device instead of paying a cross-device gather.  Under
+        per-device capacities the lookup is the prefix-sum search over
+        the capacity vector (skipping zero-capacity devices); with equal
+        capacities it reduces to the historical integer division.
         """
         if self.mesh is None:
             return 0
-        return int(b) // (self.batch // self.mesh.shape["data"])
+        return int(np.searchsorted(self._cum, int(b), side="right")) - 1
+
+    def phys_slots(self, slots) -> np.ndarray:
+        """Physical carry rows of the given LOGICAL slot indices.
+
+        The identity unless the engine is ragged (uneven capacities pad
+        the carry to [D, B_max] blocks).  Callers indexing the batched
+        carry directly — the PT swap path gathering its ladder's rows,
+        result finalization reading betas — translate through this; the
+        slot APIs translate internally.
+        """
+        return self._phys_index[np.asarray(slots, np.int64)]
+
+    def _slot_phys(self, b: int) -> int:
+        """Physical carry row of logical slot ``b``."""
+        return int(self._phys_index[int(b)])
 
     def init_slot_carry(
         self,
@@ -868,7 +1175,7 @@ class SweepEngine:
                 else {}
             )
             self._splice_jit = jax.jit(_splice, **kw)
-        return self._splice_jit(carry, jnp.int32(b), slot)
+        return self._splice_jit(carry, jnp.int32(self._slot_phys(b)), slot)
 
     def extract_slot(self, carry: SweepCarry, b: int) -> SweepCarry:
         """Slot ``b`` of a batched carry as a single-slot carry (the exact
@@ -891,18 +1198,26 @@ class SweepEngine:
                 )
 
             self._extract_jit = jax.jit(_extract)
-        return self._extract_jit(carry, jnp.int32(b))
+        return self._extract_jit(carry, jnp.int32(self._slot_phys(b)))
+
+    def slot(self, b: int) -> SlotHandle:
+        """Handle bundling every per-slot operation on logical slot ``b``
+        (`SlotHandle`): ``extract()/splice()/park()/resume()`` plus the
+        owning ``device``.  The consolidated per-slot API — the legacy
+        call families (`park_slot`, `resume_slot`, ...) delegate here."""
+        if not 0 <= b < self.batch:
+            raise ValueError(f"slot {b} out of range for batch {self.batch}")
+        return SlotHandle(self, b)
 
     def park_slot(self, carry: SweepCarry, b: int) -> ParkedSlot:
         """Checkpoint slot ``b`` for preemption: its carry row (and, on a
         multi-tenant engine, its coupling-table row) as a `ParkedSlot`.
 
-        Pure extraction (`extract_slot` / `extract_slot_tables`) — the
-        slot itself is untouched and keeps idle-resweeping its stale
-        state until the next admission overwrites it.
+        Pure extraction — the slot itself is untouched and keeps
+        idle-resweeping its stale state until the next admission
+        overwrites it.  Delegates to ``self.slot(b).park(...)``.
         """
-        tables = self.extract_slot_tables(b) if self.multi else None
-        return ParkedSlot(self.extract_slot(carry, b), tables)
+        return self.slot(b).park(carry)
 
     def resume_slot(
         self,
@@ -917,41 +1232,131 @@ class SweepEngine:
         preempted-and-resumed chain is bit-identical to an uninterrupted
         one.  ``model`` (multi-tenant, optional) records the resumed
         tables' provenance so later `set_slot_model` calls for the same
-        tenant can no-op."""
-        if self.multi and parked.tables is not None:
-            self.splice_slot_tables(b, parked.tables)
-            if model is not None:
-                check_same_topology(self.model, model)
-                self.models = self.models[:b] + (model,) + self.models[b + 1 :]
-        return self.splice_slot(carry, b, parked.carry)
+        tenant can no-op.  Delegates to ``self.slot(b).resume(...)``."""
+        return self.slot(b).resume(carry, parked, model=model)
+
+    # -- ragged padding (uneven capacities only) -------------------------------
+    #
+    # A ragged engine's physical carry has D*B_max rows; the padding rows
+    # are ordinary idle slots no API ever addresses.  Their content is a
+    # fixed deterministic template — a pure function of the base model —
+    # so expanding a logical-layout pool is reproducible on any engine
+    # with the same model, whatever the capacity vector.  Nothing ever
+    # reads a padding row (slots are independent: own carry row, own RNG
+    # columns), so padding is bit-invisible to every logical slot.
+
+    def _pad_template(self) -> tuple:
+        """(spins, h_space, h_tau, beta, rng_cols) of ONE padding slot."""
+        if self._pad_state is None:
+            m = self.model
+            sp = ising.init_spins(m, seed=0)
+            if self.rung in FLAT_RUNGS:
+                st = metropolis.make_flat_state(m, sp)
+            else:
+                st = metropolis.make_lane_state(m, sp, self.V)
+            rng = np.asarray(
+                mt.mt_init(lane_seeds(1, self._slot_lanes(), 0))
+            )
+            self._pad_state = (
+                np.asarray(st.spins),
+                np.asarray(st.h_space),
+                np.asarray(st.h_tau),
+                np.float32(m.beta),
+                rng,
+            )
+        return self._pad_state
+
+    def _expand_carry(self, carry: SweepCarry) -> SweepCarry:
+        """LOGICAL-layout carry -> padded physical layout (host numpy)."""
+        lanes = self._slot_lanes()
+        P = self._phys_batch
+        p_sp, p_hs, p_ht, p_beta, p_rng = self._pad_template()
+
+        def rows(x, fill):
+            x = np.asarray(x)
+            out = np.empty((P,) + x.shape[1:], x.dtype)
+            out[:] = fill
+            out[self._phys_index] = x
+            return out
+
+        cols = (
+            self._phys_index[:, None] * lanes + np.arange(lanes)
+        ).ravel()
+        rng = np.tile(p_rng, (1, P))
+        rng[:, cols] = np.asarray(carry.rng)
+        return SweepCarry(
+            rows(carry.spins, p_sp),
+            rows(carry.h_space, p_hs),
+            rows(carry.h_tau, p_ht),
+            rows(carry.betas, p_beta),
+            rng,
+        )
+
+    def _collapse_carry(self, carry: SweepCarry) -> SweepCarry:
+        """Padded physical host carry -> LOGICAL layout (drops padding)."""
+        lanes = self._slot_lanes()
+        cols = (
+            self._phys_index[:, None] * lanes + np.arange(lanes)
+        ).ravel()
+        return SweepCarry(
+            np.asarray(carry.spins)[self._phys_index],
+            np.asarray(carry.h_space)[self._phys_index],
+            np.asarray(carry.h_tau)[self._phys_index],
+            np.asarray(carry.betas)[self._phys_index],
+            np.asarray(carry.rng)[:, cols],
+        )
+
+    def _expand_tables(self, tables: dict) -> dict:
+        """LOGICAL [B, ...] slot tables -> padded physical [P, ...] (host
+        numpy leaves); padding rows carry the base model's couplings."""
+        fill = _coupling_tables(self.model)
+        out = {}
+        for k, v in tables.items():
+            v = np.asarray(v)
+            big = np.empty((self._phys_batch,) + v.shape[1:], v.dtype)
+            big[:] = np.asarray(fill[k])
+            big[self._phys_index] = v
+            out[k] = jnp.asarray(big)
+        return out
 
     def extract_pool(self, carry: SweepCarry) -> PoolState:
-        """The WHOLE pool's resumable state on host, in global layout.
+        """The WHOLE pool's resumable state on host, in LOGICAL global
+        layout.
 
         One `np.asarray` per carry/table leaf — on a sharded engine that
         is one cross-device gather per leaf, not a per-slot extract loop —
         so server snapshots cost O(leaves), independent of slot count.
-        Pure read; the carry and tables are untouched.
+        On a ragged engine the padding rows are dropped, which makes the
+        pool state capacity-independent: a snapshot taken under
+        capacities [4, 2, 1, 1] splices onto [2, 2, 2, 2] or a D=1 engine
+        unchanged.  Pure read; the carry and tables are untouched.
         """
         host = SweepCarry(*(np.asarray(x) for x in carry))
+        if self._ragged:
+            host = self._collapse_carry(host)
         tables = (
             {k: np.asarray(v) for k, v in self.slot_tables.items()}
             if self.multi
             else None
         )
+        if self._ragged and tables is not None:
+            tables = {k: v[self._phys_index] for k, v in tables.items()}
         return PoolState(host, tables)
 
     def splice_pool(self, pool: PoolState) -> SweepCarry:
         """Install a `PoolState` as this engine's current pool (the exact
         inverse of `extract_pool`; round-trips bit-exactly).
 
-        The pool is in global layout, so THIS engine's mesh — which may
-        have a different device count than the extracting engine's —
-        re-shards it with a plain `device_put` against its own shardings.
-        On multi-tenant engines the batched coupling tables are installed
-        too; slot model provenance resets to None (raw-splice semantics:
-        a later `set_slot_model` re-records it).  Returns the new carry
-        (the caller threads it through `run`, as always).
+        The pool is in LOGICAL global layout, so THIS engine's mesh —
+        which may have a different device count OR capacity vector than
+        the extracting engine's — re-lays it out for its own pool: a
+        ragged engine scatters the logical rows into its padded blocks
+        (`_expand_carry`), then a plain `device_put` against its own
+        shardings.  On multi-tenant engines the batched coupling tables
+        are installed too; slot model provenance resets to None
+        (raw-splice semantics: a later `set_slot_model` re-records it).
+        Returns the new carry (the caller threads it through `run`, as
+        always).
         """
         lanes = self._slot_lanes()
         spins = np.asarray(pool.carry.spins)
@@ -971,7 +1376,10 @@ class SweepEngine:
                 f"pool rng has {rng.shape[1]} lane columns; this engine "
                 f"needs {self.batch * lanes}"
             )
-        carry = SweepCarry(*(jnp.asarray(x) for x in pool.carry))
+        host = pool.carry
+        if self._ragged:
+            host = self._expand_carry(host)
+        carry = SweepCarry(*(jnp.asarray(x) for x in host))
         if self.mesh is not None:
             carry = jax.device_put(carry, self._carry_shardings())
         if self.multi:
@@ -979,7 +1387,10 @@ class SweepEngine:
                 raise ValueError(
                     "multi-tenant engines need the pool's coupling tables"
                 )
-            tabs = {k: jnp.asarray(v) for k, v in pool.tables.items()}
+            if self._ragged:
+                tabs = self._expand_tables(pool.tables)
+            else:
+                tabs = {k: jnp.asarray(v) for k, v in pool.tables.items()}
             self.slot_tables = tabs
             if self.mesh is not None:
                 self.slot_tables = jax.device_put(
@@ -995,7 +1406,7 @@ class SweepEngine:
     def set_slot_betas(self, carry: SweepCarry, slots, betas) -> SweepCarry:
         """Rewrite the betas of the given slots (anneal-schedule advance,
         tempering swaps) without touching spins, fields, or RNG."""
-        idx = jnp.asarray(np.asarray(slots, np.int32))
+        idx = jnp.asarray(self.phys_slots(slots).astype(np.int32))
         vals = jnp.asarray(betas, f32)
         new = carry.betas.at[idx].set(vals)
         if self.mesh is not None:  # keep the betas row sharded
@@ -1071,7 +1482,7 @@ class SweepEngine:
             )
             self._splice_tables_jit = jax.jit(_splice, **kw)
         self.slot_tables = self._splice_tables_jit(
-            self.slot_tables, jnp.int32(b), slot
+            self.slot_tables, jnp.int32(self._slot_phys(b)), slot
         )
 
     def extract_slot_tables(self, b: int) -> dict:
@@ -1089,7 +1500,9 @@ class SweepEngine:
                 )
 
             self._extract_tables_jit = jax.jit(_extract)
-        return self._extract_tables_jit(self.slot_tables, jnp.int32(b))
+        return self._extract_tables_jit(
+            self.slot_tables, jnp.int32(self._slot_phys(b))
+        )
 
     def set_slot_model(self, b: int, model: ising.LayeredModel) -> None:
         """Admit ``model`` into slot ``b``: splice its coupling tables and

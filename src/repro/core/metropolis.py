@@ -416,7 +416,7 @@ def make_sweeper(
     exp_flavor: str | None = None,
     V: int = 4,
 ):
-    """DEPRECATED — use ``SweepEngine.build(...)`` + ``engine.run_fn``.
+    """DEPRECATED — use ``SweepEngine.create(...)`` + ``engine.run_fn``.
 
     Build (jitted_fn, initial_carry) for steady-state benchmarking.
     ``jitted_fn(carry) -> carry`` runs ``num_sweeps`` sweeps; the engine's
@@ -424,7 +424,7 @@ def make_sweeper(
     """
     from repro.core import engine as _engine
 
-    eng = _engine.SweepEngine.build(
+    eng = _engine.SweepEngine.create(
         m, rung=impl, backend="jnp", batch=1, V=V, exp_flavor=exp_flavor
     )
     carry0 = eng.init_carry(seed=seed, spins=ising.init_spins(m, seed))
@@ -441,7 +441,7 @@ def run_sweeps(
     exp_flavor: str | None = None,
     V: int = 4,
 ):
-    """DEPRECATED — use ``SweepEngine.build(...)`` + ``engine.run``.
+    """DEPRECATED — use ``SweepEngine.create(...)`` + ``engine.run``.
 
     Run ``num_sweeps`` Metropolis sweeps with the given ladder rung.
     Returns final spins in FLAT (layer-major) order regardless of rung, so
@@ -449,7 +449,7 @@ def run_sweeps(
     """
     from repro.core import engine as _engine
 
-    eng = _engine.SweepEngine.build(
+    eng = _engine.SweepEngine.create(
         m, rung=impl, backend="jnp", batch=1, V=V, exp_flavor=exp_flavor
     )
     carry = eng.init_carry(seed=seed, spins=np.asarray(spins))

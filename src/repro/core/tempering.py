@@ -78,7 +78,7 @@ def make_pt_engine(
         from repro.kernels import ops
 
         V = ops.LANES
-    return sweep_engine.SweepEngine.build(
+    return sweep_engine.SweepEngine.create(
         m,
         rung=rung,
         backend=backend,

@@ -32,10 +32,14 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
 def make_slot_mesh(data: int | None = None) -> Mesh:
     """1-D ``("data",)`` mesh for slot-parallel serving (`SweepEngine`'s
     ``mesh=``): replica slots shard over this axis, one slot pool per
-    device.  ``data=None`` takes every visible device — on CPU that is
-    whatever ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
-    forced, the trick that makes the sharded path CI-testable without a
-    TPU."""
+    device.  The mesh names the devices only; HOW MANY slots each one
+    owns is the engine's/server's ``capacities=[...]`` vector (default:
+    the equal ``batch/D`` split), so a heterogeneous fleet — big host
+    plus small accelerators — pairs one mesh with an uneven vector
+    rather than needing a different mesh type.  ``data=None`` takes
+    every visible device — on CPU that is whatever
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` forced, the
+    trick that makes the sharded path CI-testable without a TPU."""
     devs = jax.devices()
     if data is None:
         data = len(devs)

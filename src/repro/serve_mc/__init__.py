@@ -16,6 +16,7 @@ from repro.serve_mc.scheduler import (
     PlacementPlanner,
     PriorityBackfillPolicy,
     SampleServer,
+    ServeConfig,
     SlotPool,
     make_policy,
 )
@@ -30,6 +31,7 @@ __all__ = [
     "PlacementPlanner",
     "PriorityBackfillPolicy",
     "SampleServer",
+    "ServeConfig",
     "SlotPool",
     "make_policy",
     "restore_server",

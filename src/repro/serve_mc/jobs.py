@@ -465,7 +465,9 @@ class PTJob(_ScheduledJob):
         ]
 
     def _gather_state(self, eng, carry, slots) -> tempering.PTState:
-        idx = np.asarray(slots, np.int64)
+        # Physical carry rows of the ladder's LOGICAL slots (identity
+        # unless the engine pads an uneven capacity vector).
+        idx = eng.phys_slots(slots)
         lanes = eng._slot_lanes()
         cols = np.concatenate([np.arange(b * lanes, (b + 1) * lanes) for b in idx])
         return tempering.PTState(
@@ -513,11 +515,13 @@ class PTJob(_ScheduledJob):
             # spin movement); only the job's R energy/beta scalars cross
             # devices, and the swap decision is the same `_swap_decide`
             # body as `swap_phase` — bit-identical to the resident path.
-            idx = np.asarray(slots, np.int64)
-            energies = eng.slot_energies(carry)[idx]
+            # `slot_energies` is already a LOGICAL (B,) view; the carry's
+            # betas row is PHYSICAL and needs the translated indices.
+            lidx = np.asarray(slots, np.int64)
+            energies = eng.slot_energies(carry)[lidx]
             betas, self.swap_rng, self.swap_accept, self.swap_propose = (
                 tempering.swap_phase_from_energies(
-                    carry.betas[idx],
+                    carry.betas[eng.phys_slots(slots)],
                     energies,
                     self.swap_rng,
                     self.swap_accept,
@@ -545,7 +549,7 @@ class PTJob(_ScheduledJob):
         spins = np.stack(
             [eng.spins_flat(eng.extract_slot(server.carry, b))[0] for b in slots]
         )
-        betas = np.asarray(server.carry.betas)[np.asarray(slots)]
+        betas = np.asarray(server.carry.betas)[eng.phys_slots(slots)]
         return JobResult(
             jid=self.jid,
             spins=spins,

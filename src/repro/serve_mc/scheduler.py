@@ -65,15 +65,21 @@ on a single-model server (DESIGN.md §Multi-tenancy).
 shards the slot pool over D devices: ``slots`` stays the GLOBAL count,
 every chunk advances all slots as one `shard_map` launch with zero
 cross-device traffic.  Admission is PLACEMENT-AWARE (`SlotPool`): free
-lists are keyed by device over the mesh's contiguous [D, B/D] layout,
+lists are keyed by device over the mesh's contiguous per-device blocks,
 policies plan placements (not just jobs), multi-slot jobs — PT ladders
 above all — pack onto ONE device whenever any device has room (spanning
 only under fragmentation, and a chunk-boundary rebalancer migrates
 parked slots to undo even that), and a device-local ladder's swap phase
 takes the in-device fast path instead of the cross-device energy gather.
-Bit-exactness extends across the mesh AND across placements: D devices
-== 1 device == any slot assignment for every job (DESIGN.md §Mesh,
-tests/test_sharded.py, tests/test_placement.py).
+``capacities=[...]`` makes the mesh HETEROGENEOUS: each device owns that
+many global slots (prefix-sum blocks instead of the equal ``B/D``
+split), the engine pads its physical layout per device, and every
+placement tie-break ranks devices by RELATIVE free capacity so a big
+host and a small accelerator are compared fairly.  Bit-exactness
+extends across the mesh AND across placements: D devices == 1 device ==
+any slot assignment — even an uneven one — for every job (DESIGN.md
+§Mesh, tests/test_sharded.py, tests/test_placement.py,
+tests/test_hetero.py).
 
 TELEMETRY (DESIGN.md §Observability): the server owns a
 `repro.obs.Telemetry` registry — counters/gauges/histograms that
@@ -97,6 +103,7 @@ so one straggling device is detected, not averaged away.
 from __future__ import annotations
 
 import bisect
+import dataclasses
 import time
 from collections import Counter, defaultdict, deque
 from typing import List
@@ -105,7 +112,7 @@ import jax
 import numpy as np
 
 from repro.core import ising
-from repro.core.engine import SweepEngine
+from repro.core.engine import SweepEngine, normalize_capacities
 from repro.obs import LaunchSkewMonitor, ObservableStream, Telemetry
 
 from repro.serve_mc.jobs import JobResult
@@ -160,29 +167,57 @@ class SlotPool:
     server is bit-and-schedule-identical to the pre-placement code.
     """
 
-    def __init__(self, slots: int, devices: int = 1, mode: str = "affine"):
+    def __init__(
+        self,
+        slots: int,
+        devices: int = 1,
+        mode: str = "affine",
+        capacities=None,
+    ):
         if devices < 1:
             raise ValueError(f"devices must be >= 1, got {devices}")
-        if slots % devices != 0:
-            raise ValueError(
-                f"slots {slots} must divide evenly over {devices} devices"
-            )
         if mode not in ("affine", "flat"):
             raise ValueError(
                 f"placement mode must be 'affine' or 'flat', got {mode!r}"
             )
         self.slots = int(slots)
         self.devices = int(devices)
-        self.cap = self.slots // self.devices
+        # One validation path with the engine: equal split (and its
+        # historical "divide evenly" error) when capacities is None,
+        # else the explicit per-device vector.
+        self.capacities = normalize_capacities(
+            self.devices, self.slots, capacities
+        )
+        # Largest per-device block: the bound on how wide a job can be
+        # placed without spanning (planner gates check W <= cap).
+        self.cap = max(self.capacities)
         self.mode = mode
+        self._cum = [0]
+        for c in self.capacities:
+            self._cum.append(self._cum[-1] + c)
         self._free: list[list[int]] = [
-            list(range(d * self.cap, (d + 1) * self.cap))
+            list(range(self._cum[d], self._cum[d + 1]))
             for d in range(self.devices)
         ]
 
     def device_of(self, b: int) -> int:
-        """Device owning global slot ``b`` (contiguous [D, B/D] blocks)."""
-        return int(b) // self.cap
+        """Device owning global slot ``b``: the prefix-sum bracket of the
+        capacity vector (with equal capacities this is exactly the
+        historical ``b // (B/D)`` contiguous-block rule)."""
+        return bisect.bisect_right(self._cum, int(b)) - 1
+
+    def _rel_free(self, d: int) -> float:
+        """Free fraction of device ``d`` (0.0 for a zero-capacity device).
+
+        Tie-break currency on heterogeneous pools: comparing absolute
+        free counts would treat "2 of 8 free" as fuller than "1 of 1
+        free"; relative capacity ranks devices by how full they really
+        are.  On equal-capacity pools every comparison below reduces to
+        the historical absolute-count order (same denominator), so PR 9
+        placements are reproduced decision-for-decision.
+        """
+        c = self.capacities[d]
+        return len(self._free[d]) / c if c else 0.0
 
     @property
     def total_free(self) -> int:
@@ -202,6 +237,7 @@ class SlotPool:
         out = SlotPool.__new__(SlotPool)
         out.slots, out.devices = self.slots, self.devices
         out.cap, out.mode = self.cap, self.mode
+        out.capacities, out._cum = self.capacities, list(self._cum)
         out._free = [list(f) for f in self._free]
         return out
 
@@ -261,20 +297,23 @@ class SlotPool:
                 if len(taken) == n:
                     break
             return tuple(taken)
-        # Device-affine: best-fit device (fewest free slots that still fit,
-        # ties to the lowest index) keeps the emptiest devices whole for
-        # wide ladders; `avoid` is considered only when nothing else fits.
+        # Device-affine: best-fit device (smallest RELATIVE free fraction
+        # that still fits, then fewest absolute free, ties to the lowest
+        # index) keeps the emptiest devices whole for wide ladders across
+        # uneven capacity vectors; `avoid` is considered only when
+        # nothing else fits.
         fits = [d for d in range(self.devices) if len(self._free[d]) >= n]
         pick = [d for d in fits if d != avoid] or fits
         if pick:
-            d = min(pick, key=lambda d: (len(self._free[d]), d))
+            d = min(pick, key=lambda d: (self._rel_free(d), len(self._free[d]), d))
             return tuple(self._take_lowest(d, n))
         # Spanning fallback: fragmentation forces a cross-device placement;
-        # take from the most-free devices first so the job straddles as
-        # few devices as possible (the avoided device contributes last).
+        # take from the relatively-emptiest devices first so the job
+        # straddles as few devices as possible (the avoided device
+        # contributes last).
         order = sorted(
             (d for d in range(self.devices) if self._free[d]),
-            key=lambda d: (d == avoid, -len(self._free[d]), d),
+            key=lambda d: (d == avoid, -self._rel_free(d), -len(self._free[d]), d),
         )
         taken = []
         for d in order:
@@ -342,6 +381,10 @@ class PlacementPlanner(int):
     @property
     def cap(self) -> int:
         return self._pool.cap
+
+    @property
+    def capacities(self) -> tuple:
+        return self._pool.capacities
 
     @property
     def total_free(self) -> int:
@@ -620,9 +663,18 @@ class PriorityBackfillPolicy(AdmissionPolicy):
                 if j.total_remaining() <= start:
                     for b in planner.slots_of(j):
                         avail[planner.device_of(b)] += 1
-            best = max(range(planner.devices), key=lambda d: (avail[d], -d))
-            if avail[best] >= W:
-                d_star, spare_dev = best, avail[best] - W
+            # Only devices that can hold W at all are candidates (an
+            # uneven pool may have devices smaller than the job); rank
+            # by RELATIVE projected availability so a half-empty small
+            # device does not outbid a nearly-empty big one.
+            caps = planner.capacities
+            feas = [d for d in range(planner.devices) if caps[d] >= W]
+            if feas:
+                best = max(
+                    feas, key=lambda d: (avail[d] / caps[d], avail[d], -d)
+                )
+                if avail[best] >= W:
+                    d_star, spare_dev = best, avail[best] - W
         return start, spare, d_star, spare_dev
 
     def _pick_victims(self, job, running: list, free: int) -> list | None:
@@ -829,36 +881,84 @@ class AdaptiveChunker:
             self.per_sweep_ewma += self.alpha * (per_sweep - self.per_sweep_ewma)
 
 
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Every `SampleServer` construction knob as one value object.
+
+    The server's constructor had grown a kwarg per subsystem (engine
+    shape, scheduling policy, placement, telemetry, crash safety, ...);
+    a config object makes the full shape nameable — snapshots persist
+    it, `restore_server` rebuilds from it, and call sites can share or
+    tweak one config (`dataclasses.replace`) instead of re-threading a
+    dozen kwargs.  ``SampleServer(model, config=cfg)`` and the historical
+    ``SampleServer(model, slots=8, ...)`` are the same thing: bare
+    kwargs are folded into the config (kwargs win over a config's field
+    when both are given).  Field semantics are documented on
+    `SampleServer`; defaults here ARE the server's defaults.
+    """
+
+    slots: int = 8
+    chunk_sweeps: int | str = 8
+    rung: str = "cb"
+    backend: str = "jnp"
+    V: int = 4
+    exp_flavor: str | None = None
+    interpret: bool | None = None
+    replica_tile: int | None = None
+    idle_seed: int = 0
+    chunker: "AdaptiveChunker | None" = None
+    multi_tenant: bool = False
+    policy: object = "fair"
+    user_weights: dict | None = None
+    aging_sweeps: int = 0
+    wait_window: int = 256
+    mesh: object = None
+    placement: str = "affine"
+    capacities: tuple | None = None
+    telemetry: object = True
+    stream: "ObservableStream | None" = None
+    snapshot_manager: object = None
+    snapshot_every_sweeps: int = 0
+    preemption: object = None
+
+
 class SampleServer:
-    """Schedules a queue of jobs onto the batch dim of one engine."""
+    """Schedules a queue of jobs onto the batch dim of one engine.
+
+    Construction: ``SampleServer(model, config=ServeConfig(...))`` or
+    the historical bare kwargs (``SampleServer(model, slots=8, ...)``)
+    — kwargs are folded into the config, overriding its fields, and the
+    merged config is kept as ``self.config`` (snapshots persist the
+    construction shape from it).
+    """
 
     def __init__(
         self,
         model: ising.LayeredModel,
         *,
-        slots: int = 8,
-        chunk_sweeps: int | str = 8,
-        rung: str = "cb",
-        backend: str = "jnp",
-        V: int = 4,
-        exp_flavor: str | None = None,
-        interpret: bool | None = None,
-        replica_tile: int | None = None,
-        idle_seed: int = 0,
-        chunker: AdaptiveChunker | None = None,
-        multi_tenant: bool = False,
-        policy="fair",
-        user_weights: dict[str, float] | None = None,
-        aging_sweeps: int = 0,
-        wait_window: int = 256,
-        mesh=None,
-        placement: str = "affine",
-        telemetry: bool | Telemetry = True,
-        stream: ObservableStream | None = None,
-        snapshot_manager=None,
-        snapshot_every_sweeps: int = 0,
-        preemption=None,
+        config: ServeConfig | None = None,
+        **kwargs,
     ):
+        if config is None:
+            cfg = ServeConfig(**kwargs)  # TypeError names unknown kwargs
+        elif kwargs:
+            cfg = dataclasses.replace(config, **kwargs)
+        else:
+            cfg = config
+        self.config = cfg
+        slots = cfg.slots
+        chunk_sweeps = cfg.chunk_sweeps
+        rung, backend, V = cfg.rung, cfg.backend, cfg.V
+        exp_flavor, interpret = cfg.exp_flavor, cfg.interpret
+        replica_tile, idle_seed = cfg.replica_tile, cfg.idle_seed
+        chunker, multi_tenant = cfg.chunker, cfg.multi_tenant
+        policy, user_weights = cfg.policy, cfg.user_weights
+        aging_sweeps, wait_window = cfg.aging_sweeps, cfg.wait_window
+        mesh, placement = cfg.mesh, cfg.placement
+        telemetry, stream = cfg.telemetry, cfg.stream
+        snapshot_manager = cfg.snapshot_manager
+        snapshot_every_sweeps = cfg.snapshot_every_sweeps
+        preemption = cfg.preemption
         if chunk_sweeps == "adaptive":
             self._chunker = chunker or AdaptiveChunker()
         elif isinstance(chunk_sweeps, str):
@@ -874,31 +974,21 @@ class SampleServer:
 
             V = ops.LANES
         self.multi_tenant = bool(multi_tenant)
-        if self.multi_tenant:
-            # Every slot starts on the base model; jobs carrying their own
-            # model get its coupling tables spliced in at admission.
-            self.engine = SweepEngine.build_multi(
-                [model] * slots,
-                rung=rung,
-                backend=backend,
-                V=V,
-                exp_flavor=exp_flavor,
-                interpret=interpret,
-                replica_tile=replica_tile,
-                mesh=mesh,
-            )
-        else:
-            self.engine = SweepEngine.build(
-                model,
-                rung=rung,
-                backend=backend,
-                batch=slots,
-                V=V,
-                exp_flavor=exp_flavor,
-                interpret=interpret,
-                replica_tile=replica_tile,
-                mesh=mesh,
-            )
+        # One constructor path for both tenancy shapes: a multi-tenant
+        # server starts every slot on the base model (jobs carrying their
+        # own model get its coupling tables spliced in at admission).
+        self.engine = SweepEngine.create(
+            [model] * slots if self.multi_tenant else model,
+            rung=rung,
+            backend=backend,
+            batch=None if self.multi_tenant else slots,
+            V=V,
+            exp_flavor=exp_flavor,
+            interpret=interpret,
+            replica_tile=replica_tile,
+            mesh=mesh,
+            capacities=cfg.capacities,
+        )
         # Idle slots hold (and keep sweeping) this placeholder state until
         # a job is spliced over it.
         self.carry = self.engine.init_carry(seed=idle_seed)
@@ -942,11 +1032,18 @@ class SampleServer:
         self._warm_chunks: set[int] = set()
         self.devices = self.engine.mesh.shape["data"] if mesh is not None else 1
         # The slot pool: free lists keyed by device over the mesh's
-        # contiguous [D, B/D] layout.  placement="affine" packs multi-slot
-        # jobs onto one device when possible (PT swaps stay on the
-        # in-device fast path); "flat" is the historical single-list
-        # order.  Placement never changes results, only locality.
-        self._pool = SlotPool(self.slots, devices=self.devices, mode=placement)
+        # contiguous per-device blocks (equal B/D split, or the explicit
+        # ``capacities`` vector on a heterogeneous mesh).  placement=
+        # "affine" packs multi-slot jobs onto one device when possible
+        # (PT swaps stay on the in-device fast path); "flat" is the
+        # historical single-list order.  Placement never changes
+        # results, only locality.
+        self._pool = SlotPool(
+            self.slots,
+            devices=self.devices,
+            mode=placement,
+            capacities=self.engine.capacities if mesh is not None else None,
+        )
         self._skew = (
             LaunchSkewMonitor(self.devices) if self.devices > 1 else None
         )
@@ -1127,7 +1224,7 @@ class SampleServer:
         slots.  The policy has already re-queued the job; re-admission
         resumes it bit-exactly (`_place`)."""
         _, taken = self._active.pop(job.jid)
-        job.parked = [self.engine.park_slot(self.carry, b) for b in taken]
+        job.parked = [self.engine.slot(b).park(self.carry) for b in taken]
         job.preemptions += 1
         self._c_preempt.add(1)
         self._pool.release_all(taken)  # raises on double-free
@@ -1172,8 +1269,8 @@ class SampleServer:
         if job.parked is not None:
             model = job.model_on(self) if self.multi_tenant else None
             for b, parked in zip(taken, job.parked):
-                self.carry = self.engine.resume_slot(
-                    self.carry, b, parked, model=model
+                self.carry = self.engine.slot(b).resume(
+                    self.carry, parked, model=model
                 )
             job.parked = None
         else:
@@ -1184,7 +1281,7 @@ class SampleServer:
                     # model reset the slot to the base model, so a retired
                     # tenant's tables never leak into the next job).
                     self.engine.set_slot_model(b, job.model_on(self))
-                self.carry = self.engine.splice_slot(self.carry, b, slot_carry)
+                self.carry = self.engine.slot(b).splice(self.carry, slot_carry)
         if job._admit_time is None:
             job._admit_time = time.perf_counter()
             job._admit_sweep = self.sweeps_elapsed
@@ -1214,10 +1311,12 @@ class SampleServer:
     def _rebalance(self) -> None:
         """Chunk-boundary defragmentation (affine mode, ``devices > 1``).
 
-        When a queued multi-slot job would fit one device (W <= B/D) and
-        fits the pool globally, but fragmentation leaves no single device
-        with W free, migrate active slots OFF the most-free device until
-        it can host the job whole.  Each migration is a park+resume pair —
+        When a queued multi-slot job would fit one device (W no wider
+        than the largest per-device capacity) and fits the pool
+        globally, but fragmentation leaves no single device with W free,
+        migrate active slots OFF the relatively-most-free device that
+        can hold W until it can host the job whole.  Each migration is a
+        park+resume pair —
         position- and device-independent bit-exact (DESIGN.md §Recovery) —
         so rebalancing changes placement, never results.  Invariants: the
         total free count is unchanged (one release per alloc); migrations
@@ -1239,7 +1338,20 @@ class SampleServer:
         if target is None:
             return
         free_by = pool.free_by_device()
-        d_t = max(range(self.devices), key=lambda d: (free_by[d], -d))
+        caps = pool.capacities
+        # Migration target: relatively-emptiest device big enough to
+        # host the job whole (absolute free, then lowest index, as ties).
+        feas = [d for d in range(self.devices) if caps[d] >= target.num_slots]
+        if not feas:
+            return
+        d_t = max(
+            feas,
+            key=lambda d: (
+                free_by[d] / caps[d] if caps[d] else 0.0,
+                free_by[d],
+                -d,
+            ),
+        )
         need = target.num_slots - free_by[d_t]
         if need > pool.total_free - free_by[d_t]:
             return  # nowhere else to absorb the displaced slots
@@ -1261,10 +1373,10 @@ class SampleServer:
             if pool.device_of(b_dst) == d_t:
                 pool.release(b_dst)  # only d_t itself had room: stop
                 break
-            parked = self.engine.park_slot(self.carry, b_src)
+            parked = self.engine.slot(b_src).park(self.carry)
             model = job.model_on(self) if self.multi_tenant else None
-            self.carry = self.engine.resume_slot(
-                self.carry, b_dst, parked, model=model
+            self.carry = self.engine.slot(b_dst).resume(
+                self.carry, parked, model=model
             )
             new_slots = list(slots)
             new_slots[i] = b_dst

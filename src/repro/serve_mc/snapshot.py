@@ -199,16 +199,26 @@ def snapshot_state(server) -> tuple[dict, dict]:
             "wait_window": server._wait_recent.maxlen,
             "devices": server.devices,
             "placement": server._pool.mode,
+            # Capacity vector the snapshot was taken under (None for the
+            # equal split).  Informational for the restorer: the pool is
+            # stored in LOGICAL layout, so restoring onto a DIFFERENT
+            # vector — or none — is just a re-layout, not a migration.
+            "capacities": (
+                list(server.config.capacities)
+                if server.config.capacities is not None
+                else None
+            ),
             "snapshot_every_sweeps": server.snapshot_every_sweeps,
         },
         "model": model_meta,
         "policy": _policy_state(server.policy),
         "jobs": jobs_meta,
         # The free list is stored FLAT in global slot indices: the
-        # per-device keying is a pure function of (index, device count),
-        # so the restoring server rebuilds its own pool for ITS mesh —
-        # a D=4 snapshot restores onto D=1 and vice versa with placement
-        # state intact (the same slots are free; only the keying moves).
+        # per-device keying is a pure function of (index, capacity
+        # vector), so the restoring server rebuilds its own pool for ITS
+        # mesh — a D=4 snapshot restores onto D=1, an uneven vector onto
+        # an even one, and vice versa, with placement state intact (the
+        # same slots are free; only the keying moves).
         "free": [int(b) for b in server._pool.flat_free()],
         "free_by_device": server._pool.free_by_device(),  # informational
         "next_jid": server._next_jid,
@@ -271,6 +281,7 @@ def restore_server(
     *,
     step: int | None = None,
     mesh=None,
+    capacities=None,
     backend: str | None = None,
     interpret: bool | None = None,
     replica_tile: int | None = None,
@@ -288,8 +299,14 @@ def restore_server(
     ``step=None`` restores the newest VALID snapshot (corrupt ones are
     skipped and GC'd by the manager).  Keyword overrides replace the
     recorded construction parameters — ``mesh`` is the usual one: the
-    pool is stored in global layout, so a D=4 snapshot restores onto
-    D=1 (mesh=None) or any other divisor mesh, and vice versa.  By
+    pool is stored in LOGICAL global layout, so a D=4 snapshot restores
+    onto D=1 (mesh=None) or any other mesh, and vice versa.
+    ``capacities`` pairs with ``mesh`` the same way it does at
+    construction: a snapshot taken under one capacity vector restores
+    bit-exactly onto any other (or onto the default equal split) — the
+    recorded vector is informational (``extra["config"]["capacities"]``),
+    never implicitly reapplied, since the restoring mesh may have a
+    different device count entirely.  By
     default periodic snapshots continue into ``source`` at the recorded
     cadence; pass ``snapshot_manager``/``snapshot_every_sweeps`` to
     redirect or disable them.
@@ -348,6 +365,7 @@ def restore_server(
         policy=policy,
         wait_window=cfg["wait_window"],
         mesh=mesh,
+        capacities=capacities,
         placement=(
             cfg.get("placement", "affine") if placement is None else placement
         ),

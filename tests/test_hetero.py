@@ -1,0 +1,420 @@
+"""Heterogeneous device meshes: per-device slot capacities, ragged pools.
+
+The contract (DESIGN.md §Mesh / §Scheduling, Heterogeneous capacities):
+an uneven capacity vector is a LAYOUT and PLACEMENT change, never a
+numerical one.  Logical slot b maps to (device, local slot) via a
+prefix-sum over the vector; the engine pads its physical carry to
+[D, B_max] blocks whose padding rows no API addresses; every placement
+tie-break ranks devices by RELATIVE free capacity.  So a [4, 2, 1, 1]
+pool must reproduce the single-device engine with the same global batch
+bit for bit — including PT ladders forced to span devices and
+park/resume across a device boundary — and a snapshot taken under one
+capacity vector must restore bit-exactly onto any other.
+
+The pure-bookkeeping edge cases (capacity validation, prefix-sum
+boundaries, double-free/double-book guards, spanning on uneven pools,
+the `ServeConfig`/`create`/`slot()` API consolidation) run on any device
+count; the engine/server parity suites need >= 4 visible devices (the
+CI leg forces them with XLA_FLAGS=--xla_force_host_platform_device_count=4).
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ising
+from repro.core.engine import (
+    ParkedSlot,
+    SlotHandle,
+    SweepEngine,
+    normalize_capacities,
+)
+from repro.launch.mesh import make_slot_mesh
+from repro.serve_mc import (
+    AnnealJob,
+    PTJob,
+    SampleServer,
+    ServeConfig,
+    SlotPool,
+    restore_server,
+    save_snapshot,
+)
+
+needs4 = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="hetero-mesh parity needs >= 4 devices "
+    "(run with XLA_FLAGS=--xla_force_host_platform_device_count=4)",
+)
+
+MODEL = ising.random_layered_model(n=5, L=8, seed=1, beta=1.0)
+
+
+def _assert_carry_equal(a, b, what=""):
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{what}: carry field {f!r} differs",
+        )
+
+
+# -----------------------------------------------------------------------------
+# Capacity-vector validation (shared by engine and pool via
+# `normalize_capacities`).
+# -----------------------------------------------------------------------------
+
+
+def test_normalize_capacities_default_equal_split():
+    assert normalize_capacities(4, 8, None) == (2, 2, 2, 2)
+    assert normalize_capacities(1, 5, None) == (5,)
+    with pytest.raises(ValueError, match="divide evenly"):
+        normalize_capacities(4, 6, None)
+
+
+def test_normalize_capacities_explicit_vector():
+    assert normalize_capacities(4, 8, [4, 2, 1, 1]) == (4, 2, 1, 1)
+    # zero-capacity devices are legal (a device can sit the pool out) ...
+    assert normalize_capacities(4, 4, (2, 0, 2, 0)) == (2, 0, 2, 0)
+    # ... as is a single-device vector
+    assert normalize_capacities(1, 8, [8]) == (8,)
+    with pytest.raises(ValueError, match="has 3 entries for 4 devices"):
+        normalize_capacities(4, 8, [4, 2, 2])
+    with pytest.raises(ValueError, match="sum 9 != batch 8"):
+        normalize_capacities(4, 8, [4, 2, 1, 2])
+    with pytest.raises(ValueError, match="at least one device"):
+        normalize_capacities(4, 0, [0, 0, 0, 0])
+    with pytest.raises(ValueError, match=">= 0"):
+        normalize_capacities(4, 8, [-1, 5, 2, 2])
+
+
+def test_engine_capacities_require_mesh():
+    with pytest.raises(ValueError, match="need a mesh"):
+        SweepEngine.create(
+            MODEL, rung="a4", backend="jnp", batch=8, capacities=[4, 2, 1, 1]
+        )
+
+
+def test_server_capacities_require_mesh():
+    with pytest.raises(ValueError, match="need a mesh"):
+        SampleServer(MODEL, slots=8, capacities=(4, 2, 1, 1))
+
+
+# -----------------------------------------------------------------------------
+# SlotPool on uneven capacities: prefix-sum device_of, guards, spanning.
+# -----------------------------------------------------------------------------
+
+
+def test_pool_device_of_prefix_sum_boundaries():
+    pool = SlotPool(8, devices=4, capacities=[4, 2, 1, 1])
+    assert [pool.device_of(b) for b in range(8)] == [0, 0, 0, 0, 1, 1, 2, 3]
+    assert pool.capacities == (4, 2, 1, 1)
+    assert pool.cap == 4  # widest single-device placement possible
+    assert pool.free_by_device() == [4, 2, 1, 1]
+    assert pool.flat_free() == list(range(8))
+
+
+def test_pool_device_of_skips_zero_capacity_devices():
+    pool = SlotPool(4, devices=4, capacities=[2, 0, 2, 0])
+    assert [pool.device_of(b) for b in range(4)] == [0, 0, 2, 2]
+    assert pool.free_by_device() == [2, 0, 2, 0]
+    # an all-device alloc never lands on the empty devices
+    taken = pool.alloc(4)
+    assert sorted(taken) == [0, 1, 2, 3]
+    assert {pool.device_of(b) for b in taken} == {0, 2}
+
+
+def test_pool_guards_preserved_on_capacity_pools():
+    pool = SlotPool(8, devices=4, capacities=[4, 2, 1, 1])
+    pool.take([5])
+    with pytest.raises(RuntimeError, match="not free"):
+        pool.take([5])  # double-book
+    pool.release(5)
+    with pytest.raises(RuntimeError, match="double-free"):
+        pool.release(5)
+    with pytest.raises(ValueError, match="outside pool"):
+        pool.release(8)
+
+
+def test_pool_clone_and_restore_free_keep_capacities():
+    pool = SlotPool(8, devices=4, capacities=[4, 2, 1, 1])
+    pool.take([0, 4, 6])
+    twin = pool.clone()
+    assert twin.capacities == pool.capacities
+    assert twin.free_by_device() == pool.free_by_device()
+    twin.restore_free(range(8))
+    assert twin.free_by_device() == [4, 2, 1, 1]
+    assert pool.free_by_device() == [3, 1, 0, 1]  # the original is untouched
+
+
+def test_pool_affine_best_fit_is_relative():
+    # free 2/4 on the big device vs 2/2 on the small one: absolute counts
+    # tie, relative occupancy must prefer the FULLER (relatively) device
+    # for a narrow job, keeping the relatively-empty one whole.
+    pool = SlotPool(6, devices=2, capacities=[4, 2])
+    pool.take([0, 1])  # device 0: 2/4 free; device 1: 2/2 free
+    taken = pool.alloc(2)
+    assert {pool.device_of(b) for b in taken} == {0}
+
+
+def test_pool_spanning_when_no_device_fits_wide_ladder():
+    pool = SlotPool(8, devices=4, capacities=[4, 2, 1, 1])
+    pool.take([0, 1, 2])  # device 0 down to 1 free; max free anywhere = 2
+    taken = pool.alloc(5)  # wider than any single device's free count
+    assert len(taken) == 5
+    devs = {pool.device_of(b) for b in taken}
+    assert len(devs) > 1  # forced to span
+    # relatively-emptiest first: device 1 (2/2 free) leads the order
+    assert pool.device_of(taken[0]) == 1
+
+
+def test_pool_equal_capacities_match_implicit_split():
+    a = SlotPool(8, devices=4)
+    b = SlotPool(8, devices=4, capacities=[2, 2, 2, 2])
+    assert a.capacities == b.capacities
+    assert [a.device_of(i) for i in range(8)] == [b.device_of(i) for i in range(8)]
+    assert a.alloc(3) == b.alloc(3)
+    assert a.free_by_device() == b.free_by_device()
+
+
+# -----------------------------------------------------------------------------
+# Construction-API consolidation: create / shims / ServeConfig / slot().
+# -----------------------------------------------------------------------------
+
+
+def test_create_single_and_multi_dispatch():
+    eng = SweepEngine.create(MODEL, rung="a4", backend="jnp", batch=2, V=4)
+    assert not eng.multi and eng.batch == 2
+    variants = [MODEL, ising.reseed_couplings(MODEL, 7)]
+    multi = SweepEngine.create(variants, rung="cb", backend="jnp", V=4)
+    assert multi.multi and multi.batch == 2
+    with pytest.raises(ValueError, match="batch"):
+        SweepEngine.create(variants, rung="cb", backend="jnp", batch=3, V=4)
+
+
+def test_build_shims_warn_and_are_bit_exact():
+    with pytest.warns(DeprecationWarning, match="SweepEngine.build is deprecated"):
+        old = SweepEngine.build(MODEL, rung="a4", backend="jnp", batch=2, V=4)
+    new = SweepEngine.create(MODEL, rung="a4", backend="jnp", batch=2, V=4)
+    _assert_carry_equal(
+        old.run(old.init_carry(seed=3), 5),
+        new.run(new.init_carry(seed=3), 5),
+        "build shim",
+    )
+    variants = [MODEL, ising.reseed_couplings(MODEL, 7)]
+    with pytest.warns(DeprecationWarning, match="build_multi is deprecated"):
+        old_m = SweepEngine.build_multi(variants, rung="cb", backend="jnp", V=4)
+    new_m = SweepEngine.create(variants, rung="cb", backend="jnp", V=4)
+    _assert_carry_equal(
+        old_m.run(old_m.init_carry(seed=3), 5),
+        new_m.run(new_m.init_carry(seed=3), 5),
+        "build_multi shim",
+    )
+
+
+def test_slot_handle_round_trip_and_delegation():
+    eng = SweepEngine.create(MODEL, rung="a4", backend="jnp", batch=4, V=4)
+    carry = eng.run(eng.init_carry(seed=1), 3)
+    h = eng.slot(2)
+    assert isinstance(h, SlotHandle) and h.index == 2 and h.device == 0
+    parked = h.park(carry)
+    assert isinstance(parked, ParkedSlot) and parked.tables is None
+    # handle extract == legacy extract_slot; resume onto ANOTHER slot
+    _assert_carry_equal(parked.carry, eng.extract_slot(carry, 2), "handle")
+    moved = eng.slot(0).resume(carry, parked)
+    _assert_carry_equal(eng.slot(0).extract(moved).carry, parked.carry, "moved")
+    # bare single-slot carries splice too
+    fresh = eng.init_slot_carry(seed=9)
+    spliced = eng.slot(3).splice(carry, fresh)
+    _assert_carry_equal(eng.extract_slot(spliced, 3), fresh, "bare splice")
+    with pytest.raises(ValueError, match="out of range"):
+        eng.slot(4)
+
+
+def test_serve_config_equivalent_to_bare_kwargs():
+    cfg = ServeConfig(slots=2, chunk_sweeps=2, rung="a4", backend="jnp",
+                      policy="fifo")
+    a = SampleServer(MODEL, config=cfg)
+    b = SampleServer(MODEL, slots=2, chunk_sweeps=2, rung="a4",
+                     backend="jnp", policy="fifo")
+    for srv in (a, b):
+        srv.submit(AnnealJob.constant(seed=4, sweeps=6, beta=1.1))
+    (ra,), (rb,) = a.drain(), b.drain()
+    np.testing.assert_array_equal(ra.spins, rb.spins)
+    assert ra.energy == rb.energy
+
+
+def test_serve_config_kwarg_folding():
+    cfg = ServeConfig(slots=4, chunk_sweeps=8)
+    srv = SampleServer(MODEL, config=cfg, chunk_sweeps=2)  # kwargs win
+    assert srv.slots == 4 and srv.chunk_sweeps == 2
+    assert srv.config.slots == 4 and srv.config.chunk_sweeps == 2
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        SampleServer(MODEL, not_a_knob=1)
+
+
+# -----------------------------------------------------------------------------
+# >= 4 devices: ragged engine/server parity and snapshot capacity migration.
+# -----------------------------------------------------------------------------
+
+
+@needs4
+@pytest.mark.parametrize("rung", ["a4", "cb"])
+def test_ragged_engine_bit_equals_single_device_jnp(rung):
+    mesh = make_slot_mesh(4)
+    ref = SweepEngine.create(MODEL, rung=rung, backend="jnp", batch=8, V=4)
+    rag = SweepEngine.create(MODEL, rung=rung, backend="jnp", batch=8, V=4,
+                             mesh=mesh, capacities=[4, 2, 1, 1])
+    r0 = ref.run(ref.init_carry(seed=5), 6)
+    r1 = rag.run(rag.init_carry(seed=5), 6)
+    # physical layouts differ (padded [D, B_max] vs flat) — compare the
+    # LOGICAL views every consumer uses
+    np.testing.assert_array_equal(ref.spins_flat(r0), rag.spins_flat(r1))
+    np.testing.assert_array_equal(
+        np.asarray(ref.slot_energies(r0)), np.asarray(rag.slot_energies(r1))
+    )
+    # hot-path outputs stay sharded (no silent gather)
+    assert "data" in r1.spins.sharding.spec
+    for b in range(8):
+        _assert_carry_equal(
+            ref.extract_slot(r0, b), rag.extract_slot(r1, b), f"slot {b}"
+        )
+
+
+@needs4
+@pytest.mark.parametrize("rung", ["a4", "cb"])
+def test_ragged_engine_bit_equals_single_device_pallas(rung):
+    from repro.kernels import ops
+
+    m = ising.random_layered_model(n=4, L=2 * ops.LANES, seed=3, beta=0.9)
+    mesh = make_slot_mesh(4)
+    ref = SweepEngine.create(m, rung=rung, backend="pallas", batch=4,
+                             V=ops.LANES)
+    rag = SweepEngine.create(m, rung=rung, backend="pallas", batch=4,
+                             V=ops.LANES, mesh=mesh, capacities=[2, 1, 1, 0])
+    r0 = ref.run(ref.init_carry(seed=2), 3)
+    r1 = rag.run(rag.init_carry(seed=2), 3)
+    np.testing.assert_array_equal(ref.spins_flat(r0), rag.spins_flat(r1))
+
+
+@needs4
+def test_ragged_equal_vector_reproduces_even_split():
+    """capacities=[2,2,2,2] IS the PR 9 layout: no padding, identical
+    carries (not just identical logical views)."""
+    mesh = make_slot_mesh(4)
+    even = SweepEngine.create(MODEL, rung="a4", backend="jnp", batch=8, V=4,
+                              mesh=mesh)
+    expl = SweepEngine.create(MODEL, rung="a4", backend="jnp", batch=8, V=4,
+                              mesh=mesh, capacities=(2, 2, 2, 2))
+    assert not expl._ragged
+    _assert_carry_equal(
+        even.run(even.init_carry(seed=5), 6),
+        expl.run(expl.init_carry(seed=5), 6),
+        "equal vector",
+    )
+
+
+def _hetero_workload(mesh, capacities, rung):
+    srv = SampleServer(MODEL, slots=8, chunk_sweeps=2, rung=rung,
+                       backend="jnp", V=4, mesh=mesh, capacities=capacities,
+                       policy="backfill")
+    jobs = [AnnealJob.constant(seed=s, sweeps=b, beta=1.0)
+            for s, b in [(10, 3), (11, 7), (12, 5), (13, 4), (14, 9)]]
+    # 6 replicas > max capacity 4: on [4,2,1,1] this ladder MUST span
+    # devices, driving the cross-device swap path on a ragged pool.
+    pt = PTJob(seed=5, betas=np.linspace(0.5, 1.5, 6).astype(np.float32),
+               num_rounds=3, sweeps_per_round=2)
+    for j in jobs:
+        srv.submit(j)
+    srv.submit(pt)
+    res = {r.jid: r for r in srv.drain()}
+    return srv, jobs, pt, res
+
+
+@needs4
+@pytest.mark.parametrize("rung", ["a4", "cb"])
+def test_ragged_server_bit_equals_unsharded(rung):
+    _, jobs1, pt1, res1 = _hetero_workload(None, None, rung)
+    srv4, jobs4, pt4, res4 = _hetero_workload(
+        make_slot_mesh(4), (4, 2, 1, 1), rung
+    )
+    assert srv4._c_place_span.value > 0  # the wide ladder really spanned
+    assert srv4._c_swap_cross.value > 0
+    for j1, j4 in zip(jobs1 + [pt1], jobs4 + [pt4]):
+        np.testing.assert_array_equal(res1[j1.jid].spins, res4[j4.jid].spins)
+        np.testing.assert_array_equal(
+            np.asarray(res1[j1.jid].energy), np.asarray(res4[j4.jid].energy)
+        )
+    np.testing.assert_array_equal(
+        res1[pt1.jid].extras["betas"], res4[pt4.jid].extras["betas"]
+    )
+    assert (res1[pt1.jid].extras["swap_accept"]
+            == res4[pt4.jid].extras["swap_accept"])
+
+
+@needs4
+def test_ragged_preemption_park_resume_across_boundary():
+    """Preemption on an uneven pool: the evicted job's slot can resume on
+    a device with a DIFFERENT capacity; it still bit-equals solo."""
+    mesh = make_slot_mesh(4)
+    srv = SampleServer(MODEL, slots=4, chunk_sweeps=2, rung="a4",
+                       backend="jnp", V=4, mesh=mesh, capacities=(2, 1, 1, 0),
+                       policy="backfill")
+    low = AnnealJob.constant(seed=7, sweeps=10, beta=1.1)
+    srv.submit(low)
+    srv.step()
+    hi = PTJob(seed=9, betas=np.linspace(0.5, 1.5, 4).astype(np.float32),
+               num_rounds=2, sweeps_per_round=2, priority=5)
+    srv.submit(hi)
+    res = {r.jid: r for r in srv.drain()}
+    assert low.preemptions == 1
+    solo = SampleServer(MODEL, slots=1, chunk_sweeps=2, rung="a4",
+                        backend="jnp", V=4, policy="fifo")
+    solo.submit(AnnealJob.constant(seed=7, sweeps=10, beta=1.1))
+    (r_solo,) = solo.drain()
+    np.testing.assert_array_equal(r_solo.spins, res[low.jid].spins)
+    assert r_solo.energy == res[low.jid].energy
+
+
+@needs4
+def test_snapshot_migrates_across_capacity_vectors(tmp_path):
+    """A snapshot under [4,2,1,1] restores bit-exactly onto [2,2,2,2]
+    and onto D=1 — capacities are placement config, not state."""
+    from repro.ckpt.manager import CheckpointManager
+
+    mesh = make_slot_mesh(4)
+
+    def submit_all(server):
+        server.submit(PTJob(seed=11, betas=[0.6, 0.8, 1.0], num_rounds=8,
+                            sweeps_per_round=4))
+        server.submit(AnnealJob.constant(seed=3, sweeps=60, beta=1.1))
+        server.submit(AnnealJob.constant(seed=4, sweeps=40, beta=0.9))
+        server.submit(AnnealJob.constant(seed=5, sweeps=30, beta=1.0))
+
+    def mk(caps, mesh_):
+        return SampleServer(MODEL, slots=8, chunk_sweeps=4, rung="a4",
+                            backend="jnp", policy="backfill", mesh=mesh_,
+                            capacities=caps)
+
+    ref = mk((4, 2, 1, 1), mesh)
+    submit_all(ref)
+    r_ref = {r.jid: r for r in ref.drain()}
+
+    src = mk((4, 2, 1, 1), mesh)
+    submit_all(src)
+    for _ in range(4):
+        src.step()
+    mgr = CheckpointManager(str(tmp_path))
+    save_snapshot(src, mgr)
+    _, _, extra = mgr.restore_latest_named()
+    assert extra["config"]["capacities"] == [4, 2, 1, 1]
+
+    for caps, mesh_ in [((2, 2, 2, 2), mesh), (None, None)]:
+        srv = restore_server(mgr, mesh=mesh_, capacities=caps)
+        res = {r.jid: r for r in srv.drain()}
+        assert res.keys() == r_ref.keys()
+        for jid in res:
+            np.testing.assert_array_equal(res[jid].spins, r_ref[jid].spins)
+            np.testing.assert_array_equal(
+                np.asarray(res[jid].energy), np.asarray(r_ref[jid].energy)
+            )
